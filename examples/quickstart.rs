@@ -1,0 +1,77 @@
+//! Quickstart: upload a DAG (the paper's JSON spec language), run a
+//! small simulated cluster, and print the latency/deadline report.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use archipelago::config::{Config, SEC};
+use archipelago::dag::{parse_dag_json, DagId};
+use archipelago::metrics::fmt_us;
+use archipelago::platform::{SimOptions, SimPlatform};
+use archipelago::workload::{App, ArrivalProcess, DagClass};
+
+const DAG_SPEC: &str = r#"{
+  "name": "thumbnail-pipeline",
+  "deadline_us": 250000,
+  "functions": [
+    {"name": "classify", "exec_time_us": 40000, "setup_time_us": 200000,
+     "mem_mb": 128, "artifact": "mlp_infer_b1"},
+    {"name": "notify",   "exec_time_us": 10000, "setup_time_us": 125000,
+     "mem_mb": 128}
+  ],
+  "edges": [[0, 1]]
+}"#;
+
+fn main() {
+    // 1. Parse the user's DAG upload.
+    let dag = parse_dag_json(DagId(0), DAG_SPEC).expect("valid spec");
+    println!("uploaded DAG '{}':", dag.name);
+    println!("  functions      : {}", dag.len());
+    println!("  critical path  : {}", fmt_us(dag.total_cpl));
+    println!("  deadline       : {}", fmt_us(dag.deadline));
+    println!("  slack budget   : {}", fmt_us(dag.slack()));
+
+    // 2. A small cluster: 2 SGSs × 4 workers × 4 cores.
+    let mut cfg = Config::default();
+    cfg.cluster.num_sgs = 2;
+    cfg.cluster.workers_per_sgs = 4;
+    cfg.cluster.cores_per_worker = 4;
+    cfg.cluster.proactive_pool_mb = 8 * 1024;
+
+    // 3. Offer 120 requests/second for 30 virtual seconds.
+    let apps = vec![App {
+        class: DagClass::C3,
+        dag,
+        arrivals: ArrivalProcess::constant(120.0),
+    }];
+    let opts = SimOptions {
+        seed: 1,
+        horizon: 30 * SEC,
+        warmup: 3 * SEC,
+        ..SimOptions::default()
+    };
+    let mut platform = SimPlatform::new(cfg, apps, opts);
+    let row = platform.run();
+
+    // 4. Report.
+    println!("\nafter 30s simulated at 120 rps:");
+    println!("{}", row.format_line("thumbnail-pipeline"));
+    println!(
+        "  queue delay    : p50={} p99={}",
+        fmt_us(row.qdelay_p50),
+        fmt_us(row.qdelay_p99),
+    );
+    println!(
+        "  cold starts    : {} over {} requests ({:.2}%)",
+        row.cold_starts,
+        row.completed,
+        100.0 * row.cold_starts as f64 / row.completed.max(1) as f64
+    );
+    println!(
+        "  active SGSs    : {:?}",
+        platform.lbs().active_sgs(DagId(0))
+    );
+    assert!(row.deadline_met_rate > 0.95, "quickstart should be healthy");
+    println!("\nOK: >=95% of requests met the 250ms deadline");
+}

@@ -1,0 +1,114 @@
+"""AOT export: lower every L2 model variant to HLO text + manifest.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+(what the Rust ``xla`` crate links) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path. Output layout::
+
+    artifacts/
+      manifest.json            # catalog the Rust runtime loads
+      <model>_b<batch>.hlo.txt # one self-contained module per variant
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import vmem
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant: model.Variant) -> str:
+    spec = jax.ShapeDtypeStruct(
+        variant.input_shape,
+        {"f32": "float32", "i32": "int32"}[variant.input_dtype],
+    )
+    lowered = jax.jit(variant.fn).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def export_all(out_dir: str, batches=(1, 4, 16)) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for variant in model.catalog(batches):
+        text = lower_variant(variant)
+        fname = f"{variant.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        # Structural perf estimate for the dominant layer (DESIGN.md §Perf).
+        dims = {
+            "mlp_infer": model.MLP_INFER_DIMS,
+            "text_featurize": (model.TEXT_EMBED, model.TEXT_OUT),
+            "anomaly_score": model.ANOMALY_DIMS,
+        }[variant.model]
+        k, n = max(zip(dims[:-1], dims[1:]), key=lambda kn: kn[0] * kn[1])
+        est = vmem.estimate_linear(variant.batch, k, n)
+        entries.append(
+            {
+                "name": variant.name,
+                "model": variant.model,
+                "batch": variant.batch,
+                "file": fname,
+                "input_shape": list(variant.input_shape),
+                "input_dtype": variant.input_dtype,
+                "output_shapes": [list(s) for s in variant.output_shapes],
+                "flops": variant.flops,
+                "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "hlo_bytes": len(text),
+                "vmem_bytes": est.vmem_bytes,
+                "vmem_fits": est.fits_vmem,
+                "mxu_utilization": round(est.mxu_utilization, 4),
+            }
+        )
+        print(f"  {variant.name}: {len(text)} chars, {variant.flops} flops")
+    manifest = {
+        "format": 1,
+        "interchange": "hlo-text",
+        "weight_seed": model.WEIGHT_SEED,
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--batches",
+        default="1,4,16",
+        help="comma-separated batch sizes to export per model",
+    )
+    args = ap.parse_args()
+    batches = tuple(int(b) for b in args.batches.split(","))
+    manifest = export_all(args.out_dir, batches)
+    print(
+        f"wrote {len(manifest['entries'])} artifacts + manifest.json "
+        f"to {args.out_dir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

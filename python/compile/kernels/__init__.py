@@ -1,0 +1,26 @@
+"""Layer-1 Pallas kernels for the served function bodies.
+
+Archipelago's contribution is the serving control plane (Layer 3, Rust);
+the data plane it schedules is real ML inference. These kernels implement
+the compute hot-spots of those served functions and are lowered (inside the
+Layer-2 JAX models) to HLO text consumed by the Rust PJRT runtime.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so TPU lowering is a compile-only target here. The
+block shapes are still chosen for the TPU memory hierarchy (VMEM-resident
+tiles feeding the MXU); see ``vmem.py`` for the footprint model used in
+DESIGN.md §Perf.
+"""
+
+from .fused_linear import fused_linear, linear_block_shapes
+from .softmax import row_softmax
+from . import ref
+from . import vmem
+
+__all__ = [
+    "fused_linear",
+    "linear_block_shapes",
+    "row_softmax",
+    "ref",
+    "vmem",
+]

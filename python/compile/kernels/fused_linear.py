@@ -1,0 +1,126 @@
+"""Fused linear layer Pallas kernel: ``out = act(x @ w + b)``.
+
+This is the hot-spot of every served MLP function. Fusing the bias add and
+activation into the matmul tile avoids a round-trip of the ``[bm, bn]``
+output block through HBM per epilogue op — the same insight GPU serving
+stacks apply with CUTLASS epilogues, re-thought for the TPU hierarchy:
+
+* the grid iterates over ``(M/bm, N/bn)`` output tiles;
+* each step holds an ``[bm, K]`` x-tile, ``[K, bn]`` w-tile and the
+  ``[bm, bn]`` accumulator in VMEM (see ``vmem.py`` for the budget model);
+* the contraction feeds the MXU via ``jnp.dot`` with an f32 accumulator
+  (``preferred_element_type``), the bf16-in/f32-acc systolic-array idiom.
+
+K is kept un-tiled: the served models have K <= 1024, so the x/w tiles fit
+VMEM comfortably and a K-loop (with its accumulator carry) would only add
+grid overhead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ACTIVATIONS = ("none", "relu", "gelu", "tanh")
+
+# Hardware tile quanta: the MXU is 128x128 and the VPU lane width is 128,
+# so block dims are chosen as multiples of 8 (sublane) x 128 (lane) when
+# the problem is large enough, falling back to the full dim when small.
+_LANE = 128
+_SUBLANE = 8
+
+
+def _apply_act(x, activation: str):
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "gelu":
+        # tanh-approximated GELU: cheap on the VPU, matches jax.nn.gelu's
+        # approximate=True variant used by the reference oracle.
+        return jax.nn.gelu(x, approximate=True)
+    if activation == "tanh":
+        return jnp.tanh(x)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    """One grid step: o[bm, bn] = act(x[bm, K] @ w[K, bn] + b[bn])."""
+    acc = jnp.dot(
+        x_ref[...],
+        w_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+    acc = acc + b_ref[...].astype(jnp.float32)[None, :]
+    o_ref[...] = _apply_act(acc, activation).astype(o_ref.dtype)
+
+
+def _block_dim(full: int, target: int, quantum: int) -> int:
+    """Largest multiple of ``quantum`` <= target that divides ``full``.
+
+    Falls back to ``full`` when the dim is smaller than one quantum or no
+    divisor aligns — interpret mode tolerates ragged blocks, but aligned
+    ones keep the TPU lowering honest.
+    """
+    if full <= target:
+        return full
+    best = None
+    cap = min(target, full)
+    d = (cap // quantum) * quantum
+    while d >= quantum:
+        if full % d == 0:
+            best = d
+            break
+        d -= quantum
+    return best if best is not None else full
+
+
+def linear_block_shapes(m: int, k: int, n: int) -> tuple[int, int]:
+    """Pick (bm, bn) output-tile dims for an ``[m,k] @ [k,n]`` problem.
+
+    Sized so x-tile + w-tile + out-tile stay well under the ~16 MiB VMEM
+    budget while keeping the MXU fed (>=128 lanes when available).
+    """
+    bm = _block_dim(m, 256, _SUBLANE)
+    bn = _block_dim(n, 512, _LANE)
+    return bm, bn
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def fused_linear(x, w, b, *, activation: str = "none"):
+    """``act(x @ w + b)`` as a Pallas call.
+
+    Args:
+      x: ``[m, k]`` float array.
+      w: ``[k, n]`` float array.
+      b: ``[n]`` float array.
+      activation: one of ``ACTIVATIONS``.
+
+    Returns:
+      ``[m, n]`` array with ``x.dtype``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+
+    bm, bn = linear_block_shapes(m, k, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+
+    return pl.pallas_call(
+        functools.partial(_fused_linear_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)

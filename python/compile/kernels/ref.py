@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` ops only — no Pallas, no custom lowering. pytest
+(``python/tests/``) asserts ``assert_allclose(kernel, ref)`` across a
+hypothesis-driven sweep of shapes/dtypes; this is the core L1 correctness
+signal of the build.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_linear(x, w, b, *, activation: str = "none"):
+    """Reference for ``kernels.fused_linear``: act(x @ w + b)."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    out = out + b.astype(jnp.float32)[None, :]
+    if activation == "none":
+        pass
+    elif activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out, approximate=True)
+    elif activation == "tanh":
+        out = jnp.tanh(out)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return out.astype(x.dtype)
+
+
+def row_softmax(x):
+    """Reference for ``kernels.row_softmax``."""
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)
+
+
+def mlp(x, params, activations):
+    """Reference MLP: chain of fused_linear layers."""
+    h = x
+    for (w, b), act in zip(params, activations):
+        h = fused_linear(h, w, b, activation=act)
+    return h

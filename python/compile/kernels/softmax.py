@@ -1,0 +1,41 @@
+"""Row-wise softmax Pallas kernel — the classifier-head epilogue.
+
+One grid step owns a ``[bm, n]`` row block: the max-subtract, exp and
+normalize all happen on the VPU while the block is VMEM-resident, so the
+logits never round-trip to HBM between the three passes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SUBLANE = 8
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@jax.jit
+def row_softmax(x):
+    """Numerically-stable softmax over the last axis of a 2-D array."""
+    m, n = x.shape
+    bm = m if m <= 256 else next(
+        (d for d in range(256, _SUBLANE - 1, -_SUBLANE) if m % d == 0), m
+    )
+    grid = (pl.cdiv(m, bm),)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x)

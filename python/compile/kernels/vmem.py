@@ -1,0 +1,64 @@
+"""VMEM footprint + MXU utilization model for the L1 kernels.
+
+``interpret=True`` executes kernels as CPU numpy, so wallclock is not a TPU
+proxy. Instead, per the build's hardware-adaptation rule, we *estimate* TPU
+behaviour structurally from the BlockSpecs:
+
+* VMEM footprint: bytes held live per grid step (input tiles + output tile
+  + accumulator), doubled for the double-buffered pipeline Pallas emits.
+* MXU utilization proxy: fraction of the 128x128 systolic array covered by
+  the tile's (sublane, lane) footprint, times the K-depth amortization.
+
+DESIGN.md §Perf reports these for every artifact variant.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024  # v4/v5-class core budget
+MXU_DIM = 128
+
+
+@dataclass(frozen=True)
+class LinearTileEstimate:
+    """Static cost model for one fused_linear grid step."""
+
+    bm: int
+    bn: int
+    k: int
+    dtype_bytes: int
+
+    @property
+    def vmem_bytes(self) -> int:
+        x_tile = self.bm * self.k * self.dtype_bytes
+        w_tile = self.k * self.bn * self.dtype_bytes
+        b_tile = self.bn * self.dtype_bytes
+        out_tile = self.bm * self.bn * self.dtype_bytes
+        acc = self.bm * self.bn * 4  # f32 accumulator
+        # x2: Pallas double-buffers the HBM->VMEM streams.
+        return 2 * (x_tile + w_tile + b_tile + out_tile) + acc
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Fraction of MXU lanes/sublanes covered by one pass."""
+        sub = min(self.bm, MXU_DIM) / MXU_DIM
+        lane = min(self.bn, MXU_DIM) / MXU_DIM
+        depth = min(self.k, MXU_DIM) / MXU_DIM
+        return sub * lane * min(1.0, depth)
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.bm * self.bn * self.k
+
+
+def estimate_linear(m: int, k: int, n: int, dtype_bytes: int = 4):
+    """Estimate for the block shapes ``linear_block_shapes`` would pick."""
+    from .fused_linear import linear_block_shapes
+
+    bm, bn = linear_block_shapes(m, k, n)
+    return LinearTileEstimate(bm=bm, bn=bn, k=k, dtype_bytes=dtype_bytes)

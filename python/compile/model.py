@@ -1,0 +1,187 @@
+"""Layer-2 JAX models: the serverless function bodies Archipelago serves.
+
+Each model is one "function" in the paper's sense — the unit a sandbox
+hosts and a worker core executes. They are small, latency-sensitive
+inference graphs built from the Layer-1 Pallas kernels, with weights baked
+in at lowering time (deterministic PRNG seed), so each HLO artifact is a
+self-contained ``inputs -> outputs`` computation the Rust runtime can
+execute with no parameter plumbing.
+
+Catalog (names are what the manifest + Rust side use):
+
+* ``mlp_infer``      — image-classify-style microservice: 256-d feature
+                       vector -> 2 hidden GELU layers -> 10-way softmax.
+                       The paper's C1/C3 "user-facing function" stand-in.
+* ``text_featurize`` — embedding-bag + projection: mean-pooled one-hot
+                       embedding of a token window -> 64-d feature. The
+                       C2 "non-critical user-facing" stand-in.
+* ``anomaly_score``  — background scorer: 128-d metric vector -> deep
+                       narrow MLP -> scalar. The C4 "background job"
+                       stand-in.
+
+Each is exported at several batch sizes (the dynamic batcher on the Rust
+side picks the variant that covers the batch).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_linear, row_softmax
+
+WEIGHT_SEED = 0x41C41  # deterministic across runs; tests rely on this
+
+
+def _init_linear(key, fan_in: int, fan_out: int):
+    wk, bk = jax.random.split(key)
+    scale = (2.0 / (fan_in + fan_out)) ** 0.5
+    w = jax.random.normal(wk, (fan_in, fan_out), jnp.float32) * scale
+    b = jax.random.normal(bk, (fan_out,), jnp.float32) * 0.01
+    return w, b
+
+
+def mlp_params(layer_dims, seed: int = WEIGHT_SEED):
+    """Deterministic params for a chain of linear layers."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for fan_in, fan_out in zip(layer_dims[:-1], layer_dims[1:]):
+        key, sub = jax.random.split(key)
+        params.append(_init_linear(sub, fan_in, fan_out))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Function bodies
+# ---------------------------------------------------------------------------
+
+MLP_INFER_DIMS = (256, 512, 128, 10)
+
+
+def mlp_infer(x, params=None):
+    """User-facing classifier: ``[B, 256] -> ([B, 10] probs, [B] argmax)``."""
+    if params is None:
+        params = mlp_params(MLP_INFER_DIMS)
+    (w0, b0), (w1, b1), (w2, b2) = params
+    h = fused_linear(x, w0, b0, activation="gelu")
+    h = fused_linear(h, w1, b1, activation="gelu")
+    logits = fused_linear(h, w2, b2, activation="none")
+    probs = row_softmax(logits)
+    return probs, jnp.argmax(probs, axis=-1)
+
+
+TEXT_VOCAB = 128
+TEXT_WINDOW = 32
+TEXT_EMBED = 96
+TEXT_OUT = 64
+
+
+def text_featurize(tokens, params=None):
+    """Token window -> pooled feature: ``[B, 32] i32 -> [B, 64] f32``.
+
+    The embedding lookup is expressed as one-hot @ table so the whole body
+    stays on the fused_linear kernel path (gather-free; vocab is small).
+    """
+    if params is None:
+        params = mlp_params((TEXT_EMBED, TEXT_OUT), seed=WEIGHT_SEED + 1)
+    key = jax.random.PRNGKey(WEIGHT_SEED + 2)
+    table = jax.random.normal(key, (TEXT_VOCAB, TEXT_EMBED), jnp.float32) * 0.1
+    onehot = jax.nn.one_hot(tokens, TEXT_VOCAB, dtype=jnp.float32)  # [B,W,V]
+    emb = jnp.einsum("bwv,ve->bwe", onehot, table)  # [B,W,E]
+    pooled = jnp.mean(emb, axis=1)  # [B,E]
+    (w, b) = params[0]
+    return (fused_linear(pooled, w, b, activation="tanh"),)
+
+
+ANOMALY_DIMS = (128, 256, 256, 64, 1)
+
+
+def anomaly_score(x, params=None):
+    """Background scorer: ``[B, 128] -> [B] score in (0, 1)``."""
+    if params is None:
+        params = mlp_params(ANOMALY_DIMS, seed=WEIGHT_SEED + 3)
+    h = x
+    for w, b in params[:-1]:
+        h = fused_linear(h, w, b, activation="relu")
+    w, b = params[-1]
+    raw = fused_linear(h, w, b, activation="none")
+    return (jax.nn.sigmoid(raw[:, 0]),)
+
+
+# ---------------------------------------------------------------------------
+# Export catalog
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One exportable (function, batch) artifact."""
+
+    model: str
+    batch: int
+    fn: object = field(compare=False)
+    input_shape: tuple
+    input_dtype: str
+    output_shapes: tuple
+    flops: int
+
+    @property
+    def name(self) -> str:
+        return f"{self.model}_b{self.batch}"
+
+
+def _mlp_flops(dims, batch):
+    return sum(2 * batch * a * b for a, b in zip(dims[:-1], dims[1:]))
+
+
+def catalog(batches=(1, 4, 16)) -> list[Variant]:
+    """All exported variants, in manifest order."""
+    out = []
+    for b in batches:
+        out.append(
+            Variant(
+                model="mlp_infer",
+                batch=b,
+                fn=lambda x: mlp_infer(x),
+                input_shape=(b, MLP_INFER_DIMS[0]),
+                input_dtype="f32",
+                output_shapes=((b, MLP_INFER_DIMS[-1]), (b,)),
+                flops=_mlp_flops(MLP_INFER_DIMS, b),
+            )
+        )
+        out.append(
+            Variant(
+                model="text_featurize",
+                batch=b,
+                fn=lambda t: text_featurize(t),
+                input_shape=(b, TEXT_WINDOW),
+                input_dtype="i32",
+                output_shapes=((b, TEXT_OUT),),
+                flops=2 * b * TEXT_WINDOW * TEXT_VOCAB * TEXT_EMBED
+                + _mlp_flops((TEXT_EMBED, TEXT_OUT), b),
+            )
+        )
+        out.append(
+            Variant(
+                model="anomaly_score",
+                batch=b,
+                fn=lambda x: anomaly_score(x),
+                input_shape=(b, ANOMALY_DIMS[0]),
+                input_dtype="f32",
+                output_shapes=((b,),),
+                flops=_mlp_flops(ANOMALY_DIMS, b),
+            )
+        )
+    return out
+
+
+def example_input(variant: Variant):
+    """Deterministic example input matching the variant's signature."""
+    if variant.input_dtype == "i32":
+        key = jax.random.PRNGKey(7)
+        return jax.random.randint(key, variant.input_shape, 0, TEXT_VOCAB)
+    key = jax.random.PRNGKey(7)
+    return jax.random.normal(key, variant.input_shape, jnp.float32)

@@ -1,0 +1,120 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes/dtypes/activations; assert_allclose against the
+reference is the core correctness signal for the compiled artifacts.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_linear, linear_block_shapes, ref, row_softmax
+from compile.kernels.fused_linear import ACTIVATIONS
+from compile.kernels import vmem
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+@pytest.mark.parametrize("activation", ACTIVATIONS)
+def test_fused_linear_matches_ref_basic(activation):
+    x = _rand(0, (8, 32), jnp.float32)
+    w = _rand(1, (32, 16), jnp.float32)
+    b = _rand(2, (16,), jnp.float32)
+    got = fused_linear(x, w, b, activation=activation)
+    want = ref.fused_linear(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, want, **TOL[jnp.float32])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 96),
+    n=st.integers(1, 80),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref_sweep(m, k, n, act, seed):
+    x = _rand(seed, (m, k), jnp.float32)
+    w = _rand(seed + 1, (k, n), jnp.float32)
+    b = _rand(seed + 2, (n,), jnp.float32)
+    got = fused_linear(x, w, b, activation=act)
+    want = ref.fused_linear(x, w, b, activation=act)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_linear_dtypes(dtype):
+    x = _rand(3, (16, 64), dtype)
+    w = _rand(4, (64, 32), dtype)
+    b = _rand(5, (32,), dtype)
+    got = fused_linear(x, w, b, activation="gelu")
+    want = ref.fused_linear(x, w, b, activation="gelu")
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **TOL[dtype],
+    )
+
+
+def test_fused_linear_rejects_bad_activation():
+    x = _rand(0, (4, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        fused_linear(x, x, x[0], activation="swish")
+
+
+def test_fused_linear_shape_mismatch_asserts():
+    x = _rand(0, (4, 8), jnp.float32)
+    w = _rand(1, (9, 4), jnp.float32)
+    b = _rand(2, (4,), jnp.float32)
+    with pytest.raises(AssertionError):
+        fused_linear(x, w, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 512), k=st.integers(1, 1024), n=st.integers(1, 1024))
+def test_block_shapes_divide_or_cover(m, k, n):
+    bm, bn = linear_block_shapes(m, k, n)
+    assert 1 <= bm <= m or bm == m
+    assert 1 <= bn <= n or bn == n
+    # blocks either divide the dim exactly or equal it (ragged fallback)
+    assert m % bm == 0 or bm == m
+    assert n % bn == 0 or bn == n
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 64), n=st.integers(1, 128), seed=st.integers(0, 1000))
+def test_row_softmax_matches_ref(m, n, seed):
+    x = _rand(seed, (m, n), jnp.float32) * 10.0
+    got = row_softmax(x)
+    want = ref.row_softmax(x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.sum(got, axis=-1), np.ones(m), rtol=1e-5)
+
+
+def test_row_softmax_extreme_values_stable():
+    x = jnp.array([[1e4, -1e4, 0.0], [-1e4, -1e4, -1e4]], jnp.float32)
+    got = np.asarray(row_softmax(x))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got.sum(axis=-1), [1.0, 1.0], rtol=1e-5)
+
+
+def test_vmem_estimates_fit_for_all_catalog_layers():
+    # every layer of every served model must fit the 16 MiB VMEM budget
+    from compile import model
+
+    for dims in (model.MLP_INFER_DIMS, model.ANOMALY_DIMS,
+                  (model.TEXT_EMBED, model.TEXT_OUT)):
+        for k, n in zip(dims[:-1], dims[1:]):
+            est = vmem.estimate_linear(16, k, n)
+            assert est.fits_vmem, (k, n, est.vmem_bytes)
+            assert 0.0 < est.mxu_utilization <= 1.0

@@ -1,0 +1,89 @@
+"""L2 correctness: model shapes, determinism, numerics vs oracle."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_mlp_infer_shapes_and_probs():
+    x = model.example_input(model.catalog((4,))[0])
+    probs, preds = model.mlp_infer(x)
+    assert probs.shape == (4, 10)
+    assert preds.shape == (4,)
+    np.testing.assert_allclose(np.sum(probs, axis=-1), np.ones(4), rtol=1e-5)
+    assert np.all(np.asarray(preds) >= 0) and np.all(np.asarray(preds) < 10)
+
+
+def test_mlp_infer_matches_ref_chain():
+    params = model.mlp_params(model.MLP_INFER_DIMS)
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, 256), jnp.float32)
+    probs, _ = model.mlp_infer(x, params)
+    h = ref.mlp(x, params, ["gelu", "gelu", "none"])
+    want = ref.row_softmax(h)
+    np.testing.assert_allclose(probs, want, rtol=2e-4, atol=2e-5)
+
+
+def test_text_featurize_shapes_and_range():
+    toks = jax.random.randint(
+        jax.random.PRNGKey(0), (4, model.TEXT_WINDOW), 0, model.TEXT_VOCAB
+    )
+    (feat,) = model.text_featurize(toks)
+    assert feat.shape == (4, model.TEXT_OUT)
+    # tanh output range
+    assert np.all(np.abs(np.asarray(feat)) <= 1.0)
+
+
+def test_text_featurize_out_of_vocab_tokens_zero_embed():
+    # one_hot maps out-of-range ids to all-zero rows; must stay finite
+    toks = jnp.full((2, model.TEXT_WINDOW), model.TEXT_VOCAB + 5, jnp.int32)
+    (feat,) = model.text_featurize(toks)
+    assert np.all(np.isfinite(np.asarray(feat)))
+
+
+def test_anomaly_score_shapes_and_range():
+    x = jax.random.normal(jax.random.PRNGKey(1), (6, 128), jnp.float32)
+    (score,) = model.anomaly_score(x)
+    assert score.shape == (6,)
+    s = np.asarray(score)
+    assert np.all(s > 0.0) and np.all(s < 1.0)
+
+
+def test_params_deterministic():
+    a = model.mlp_params((32, 16, 8))
+    b = model.mlp_params((32, 16, 8))
+    for (wa, ba), (wb, bb) in zip(a, b):
+        np.testing.assert_array_equal(wa, wb)
+        np.testing.assert_array_equal(ba, bb)
+
+
+def test_params_seed_sensitivity():
+    a = model.mlp_params((32, 16), seed=1)
+    b = model.mlp_params((32, 16), seed=2)
+    assert not np.array_equal(np.asarray(a[0][0]), np.asarray(b[0][0]))
+
+
+def test_catalog_covers_all_models_and_batches():
+    cat = model.catalog((1, 4))
+    names = {v.name for v in cat}
+    assert names == {
+        "mlp_infer_b1", "mlp_infer_b4",
+        "text_featurize_b1", "text_featurize_b4",
+        "anomaly_score_b1", "anomaly_score_b4",
+    }
+    for v in cat:
+        assert v.flops > 0
+        assert v.input_shape[0] == v.batch
+
+
+def test_example_inputs_match_signature():
+    for v in model.catalog((2,)):
+        x = model.example_input(v)
+        assert tuple(x.shape) == v.input_shape
+        if v.input_dtype == "i32":
+            assert x.dtype == jnp.int32
+        else:
+            assert x.dtype == jnp.float32

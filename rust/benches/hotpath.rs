@@ -1,0 +1,120 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! the discrete-event engine, the SRSF queue at depth, sandbox-table
+//! operations, demand math, and whole-platform simulation throughput
+//! (events/second) — the quantity that bounds how fast macrobenchmarks
+//! regenerate.
+
+use archipelago::config::{Config, SchedPolicy, MS, SEC};
+use archipelago::dag::{DagId, DagSpec, FnId};
+use archipelago::sandbox::SandboxTable;
+use archipelago::sgs::scheduler::{QueuedFn, RequestId, SchedQueue};
+use archipelago::sim::EventQueue;
+use archipelago::platform::{SimOptions, SimPlatform};
+use archipelago::util::bench::Bench;
+use archipelago::util::rng::{poisson_inv_cdf, Rng};
+use archipelago::workload::{App, ArrivalProcess, DagClass};
+use std::time::Instant;
+
+fn main() {
+    let bench = Bench::default();
+    println!("== hot-path microbenches ==");
+
+    // --- event queue push+pop ---
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut rng = Rng::new(1);
+    for i in 0..4096 {
+        q.push_at(rng.range_u64(0, 1 << 30), i);
+    }
+    let mut i = 4096;
+    let mut r = bench.run("event_queue push+pop (depth 4096)", || {
+        i += 1;
+        q.push_at(q.now() + rng.range_u64(1, 1 << 20), i);
+        q.pop()
+    });
+    println!("{}", r.report_line());
+
+    // --- SRSF queue at depth 1024 ---
+    let mut sq = SchedQueue::new(SchedPolicy::Srsf);
+    for i in 0..1024u64 {
+        sq.push(qf(i, &mut rng));
+    }
+    let mut i = 1024;
+    let mut r = bench.run("srsf push+pop (depth 1024)", || {
+        i += 1;
+        sq.push(qf(i, &mut rng));
+        sq.pop()
+    });
+    println!("{}", r.report_line());
+
+    // --- sandbox table acquire/release ---
+    let mut table = SandboxTable::new(32 * 1024);
+    let f = FnId {
+        dag: DagId(0),
+        idx: 0,
+    };
+    for _ in 0..8 {
+        table.begin_setup(f, 128).unwrap();
+        table.finish_setup(f).unwrap();
+    }
+    let mut now = 0;
+    let mut r = bench.run("sandbox acquire_warm+release", || {
+        now += 1;
+        table.acquire_warm(f, now).unwrap();
+        table.release(f, now).unwrap();
+    });
+    println!("{}", r.report_line());
+
+    // --- Poisson inverse CDF at provisioning-typical lambdas ---
+    let mut lam = 10.0;
+    let mut r = bench.run("poisson_inv_cdf(0.99, λ≈10..200)", || {
+        lam = if lam > 200.0 { 10.0 } else { lam + 1.0 };
+        poisson_inv_cdf(0.99, lam)
+    });
+    println!("{}", r.report_line());
+
+    // --- whole-platform simulation throughput ---
+    let mut cfg = Config::default();
+    cfg.cluster.num_sgs = 4;
+    cfg.cluster.workers_per_sgs = 4;
+    cfg.cluster.cores_per_worker = 16;
+    let apps = vec![App {
+        class: DagClass::C1,
+        dag: DagSpec::single(DagId(0), "bench", 50 * MS, 200 * MS, 128, 200 * MS),
+        arrivals: ArrivalProcess::sinusoid(2500.0, 1200.0, 10 * SEC),
+    }];
+    let opts = SimOptions {
+        seed: 42,
+        horizon: 120 * SEC,
+        warmup: 2 * SEC,
+        ..SimOptions::default()
+    };
+    let t0 = Instant::now();
+    let mut p = SimPlatform::new(cfg, apps, opts);
+    let row = p.run();
+    let wall = t0.elapsed().as_secs_f64();
+    let events = p.events_dispatched();
+    println!(
+        "sim_throughput: {events} events in {wall:.2}s = {:.0} events/s \
+         ({} completions, {:.0}x real-time)",
+        events as f64 / wall,
+        row.completed,
+        120.0 / wall,
+    );
+}
+
+fn qf(i: u64, rng: &mut Rng) -> QueuedFn {
+    QueuedFn {
+        req: RequestId(i),
+        f: FnId {
+            dag: DagId(0),
+            idx: 0,
+        },
+        dag: DagId(0),
+        enqueued_at: 0,
+        deadline_abs: rng.range_u64(1, 1 << 30),
+        remaining_work: rng.range_u64(1, 1 << 20),
+        exec_time: 1,
+        setup_time: 1,
+        mem_mb: 128,
+    }
+}

@@ -1,0 +1,26 @@
+//! End-to-end bench: regenerate every paper table/figure in quick mode
+//! and report per-experiment wall time. `cargo bench` therefore exercises
+//! the complete reproduction pipeline; full-horizon data comes from
+//! `archipelago figures --all` (or `make figures`).
+
+use std::time::Instant;
+
+use archipelago::experiments::{registry, ExpContext};
+
+fn main() {
+    let dir = std::env::temp_dir().join("archipelago_bench_figures");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut ctx = ExpContext::new(dir.to_str().unwrap());
+    ctx.quick = true;
+    println!("== paper figures, quick mode ==");
+    let t_all = Instant::now();
+    for (id, f) in registry() {
+        let t0 = Instant::now();
+        let res = f(&ctx);
+        let dt = t0.elapsed().as_secs_f64();
+        let first_line = res.summary.lines().next().unwrap_or("");
+        println!("{id:<9} {dt:>7.2}s  {first_line}");
+    }
+    println!("total: {:.1}s", t_all.elapsed().as_secs_f64());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,628 @@
+//! Baseline serving stacks the paper compares against.
+//!
+//! * **Centralized FIFO** (§7.1 "Baseline Stack", like OpenWhisk): one
+//!   scheduler with a global FIFO queue over the whole (un-partitioned)
+//!   cluster, *reactive* sandbox allocation, and a fixed inactivity
+//!   timeout (15 min) for keeping sandboxes warm. The scheduler is a
+//!   serial decision-maker: each placement costs decision time, so it
+//!   saturates at high RPS — the §2.4 scalability critique.
+//! * **Sparrow-style** (§2.4, Fig 2d): distributed schedulers place each
+//!   task by probing `p` random workers (power-of-two-choices on queue
+//!   length) and enqueueing at the shortest per-worker queue. Scales
+//!   horizontally but is sandbox-oblivious: probes routinely land on
+//!   workers without a warm sandbox.
+//!
+//! Both share the worker/sandbox substrate with Archipelago so the only
+//! differences measured are the scheduling + sandbox policies.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::{Micros, SEC};
+use crate::dag::{DagId, DagRegistry, FnId};
+use crate::metrics::{Metrics, RequestOutcome, SummaryRow};
+use crate::sgs::RequestId;
+use crate::sim::{run_until, EventQueue};
+use crate::util::rng::Rng;
+use crate::worker::{Worker, WorkerId};
+use crate::workload::App;
+
+/// Which baseline to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineKind {
+    /// Centralized FIFO + reactive sandboxes + inactivity timeout.
+    CentralizedFifo,
+    /// Sparrow-style probing with `probes` random samples per task.
+    Sparrow { probes: usize },
+}
+
+/// Baseline knobs (§7.1 and Fig 2d parameters).
+#[derive(Debug, Clone)]
+pub struct BaselineOptions {
+    pub kind: BaselineKind,
+    pub seed: u64,
+    pub horizon: Micros,
+    pub warmup: Micros,
+    /// Per-placement decision cost of the centralized scheduler
+    /// (serialized; §7.4-comparable figure).
+    pub decision_cost: Micros,
+    /// Probe round-trip for Sparrow placement.
+    pub probe_overhead: Micros,
+    /// Keep-warm inactivity timeout (15 min on AWS/Azure [8, 10]).
+    pub keep_warm_timeout: Micros,
+    pub exec_noise_frac: f64,
+}
+
+impl Default for BaselineOptions {
+    fn default() -> Self {
+        BaselineOptions {
+            kind: BaselineKind::CentralizedFifo,
+            seed: 42,
+            horizon: 60 * SEC,
+            warmup: 5 * SEC,
+            decision_cost: 241, // the paper's measured SGS decision time
+            probe_overhead: 500,
+            keep_warm_timeout: 15 * 60 * SEC,
+            exec_noise_frac: 0.05,
+        }
+    }
+}
+
+/// One schedulable function instance.
+#[derive(Debug, Clone)]
+struct Task {
+    req: RequestId,
+    f: FnId,
+    enqueued_at: Micros,
+    exec_time: Micros,
+    setup_time: Micros,
+    mem_mb: u64,
+}
+
+#[derive(Debug)]
+struct RequestState {
+    dag: DagId,
+    arrival: Micros,
+    deadline_abs: Micros,
+    pending_parents: Vec<u16>,
+    remaining: usize,
+    cold_starts: u32,
+    exec_times: Vec<Micros>,
+}
+
+#[derive(Debug)]
+enum Event {
+    Arrival { app_idx: usize },
+    /// Centralized: scheduler finished one decision; dispatch next.
+    SchedulerTurn,
+    /// Sparrow: task placed at a worker queue after the probe RTT.
+    WorkerEnqueue { worker: usize, task: Task },
+    FnComplete { worker: usize, req: RequestId, f: FnId },
+    /// Periodic idle-sandbox sweep (keep-warm timeout enforcement).
+    TimeoutSweep,
+}
+
+/// The baseline cluster simulator.
+pub struct BaselineSim {
+    opts: BaselineOptions,
+    registry: DagRegistry,
+    apps: Vec<App>,
+    workers: Vec<Worker>,
+    /// Centralized global FIFO.
+    global_queue: VecDeque<Task>,
+    /// Sparrow per-worker FIFO queues.
+    worker_queues: Vec<VecDeque<Task>>,
+    /// Centralized scheduler serialization: busy until this time.
+    scheduler_free_at: Micros,
+    scheduler_turn_pending: bool,
+    requests: HashMap<u64, RequestState>,
+    next_req: u64,
+    events: EventQueue<Event>,
+    pub metrics: Metrics,
+    rng: Rng,
+    cold_starts: u64,
+    started: bool,
+}
+
+impl BaselineSim {
+    pub fn new(
+        total_workers: usize,
+        cores_per_worker: u32,
+        worker_mem_mb: u64,
+        apps: Vec<App>,
+        opts: BaselineOptions,
+    ) -> Self {
+        let mut registry = DagRegistry::new();
+        let mut apps = apps;
+        for app in apps.iter_mut() {
+            let id = registry.register(app.dag.clone());
+            app.dag.id = id;
+        }
+        BaselineSim {
+            registry,
+            apps,
+            workers: (0..total_workers)
+                .map(|i| Worker::new(WorkerId(i as u16), cores_per_worker, worker_mem_mb))
+                .collect(),
+            global_queue: VecDeque::new(),
+            worker_queues: vec![VecDeque::new(); total_workers],
+            scheduler_free_at: 0,
+            scheduler_turn_pending: false,
+            requests: HashMap::new(),
+            next_req: 0,
+            events: EventQueue::new(),
+            metrics: Metrics::new(),
+            rng: Rng::new(opts.seed),
+            cold_starts: 0,
+            opts,
+            started: false,
+        }
+    }
+
+    pub fn cold_starts(&self) -> u64 {
+        self.cold_starts
+    }
+
+    pub fn run(&mut self) -> SummaryRow {
+        if !self.started {
+            self.started = true;
+            for idx in 0..self.apps.len() {
+                let first = self.apps[idx].arrivals.next_arrival(0, &mut self.rng);
+                self.events.push_at(first, Event::Arrival { app_idx: idx });
+            }
+            self.events.push_at(SEC, Event::TimeoutSweep);
+        }
+        let horizon = self.opts.horizon;
+        let mut queue = std::mem::take(&mut self.events);
+        run_until(&mut queue, self, horizon, |q, sim, ev| sim.handle(q, ev));
+        self.events = queue;
+        self.metrics.summary_row()
+    }
+
+    fn handle(&mut self, q: &mut EventQueue<Event>, ev: Event) {
+        match ev {
+            Event::Arrival { app_idx } => self.on_arrival(q, app_idx),
+            Event::SchedulerTurn => {
+                self.scheduler_turn_pending = false;
+                self.centralized_dispatch(q);
+            }
+            Event::WorkerEnqueue { worker, task } => {
+                self.worker_queues[worker].push_back(task);
+                self.worker_pump(q, worker);
+            }
+            Event::FnComplete { worker, req, f } => self.on_complete(q, worker, req, f),
+            Event::TimeoutSweep => {
+                self.sweep_idle_sandboxes(q.now());
+                q.push_after(SEC, Event::TimeoutSweep);
+            }
+        }
+    }
+
+    fn on_arrival(&mut self, q: &mut EventQueue<Event>, app_idx: usize) {
+        let now = q.now();
+        let dag_id = self.apps[app_idx].dag.id;
+        let dag = self.registry.get(dag_id);
+        let req = RequestId(self.next_req);
+        self.next_req += 1;
+        let noise = self.opts.exec_noise_frac;
+        let exec_times: Vec<Micros> = dag
+            .functions
+            .iter()
+            .map(|f| {
+                if noise > 0.0 {
+                    ((f.exec_time as f64) * self.rng.range_f64(1.0 - noise, 1.0 + noise))
+                        as Micros
+                } else {
+                    f.exec_time
+                }
+            })
+            .collect();
+        let state = RequestState {
+            dag: dag_id,
+            arrival: now,
+            deadline_abs: now + dag.deadline,
+            pending_parents: dag.parent_count.clone(),
+            remaining: dag.len(),
+            cold_starts: 0,
+            exec_times,
+        };
+        let roots = dag.roots.clone();
+        self.requests.insert(req.0, state);
+        for root in roots {
+            let task = self.make_task(req, dag_id, root, now);
+            self.submit(q, task);
+        }
+        let next = self.apps[app_idx].arrivals.next_arrival(now, &mut self.rng);
+        q.push_at(next, Event::Arrival { app_idx });
+    }
+
+    fn make_task(&self, req: RequestId, dag_id: DagId, fn_idx: u16, now: Micros) -> Task {
+        let dag = self.registry.get(dag_id);
+        let spec = &dag.functions[fn_idx as usize];
+        Task {
+            req,
+            f: dag.fn_id(fn_idx),
+            enqueued_at: now,
+            exec_time: self.requests[&req.0].exec_times[fn_idx as usize],
+            setup_time: spec.setup_time,
+            mem_mb: spec.mem_mb,
+        }
+    }
+
+    fn submit(&mut self, q: &mut EventQueue<Event>, task: Task) {
+        match self.opts.kind {
+            BaselineKind::CentralizedFifo => {
+                self.global_queue.push_back(task);
+                self.centralized_dispatch(q);
+            }
+            BaselineKind::Sparrow { probes } => {
+                // power-of-p-choices on total queued work per worker
+                let n = self.workers.len();
+                let mut best: Option<(usize, usize)> = None; // (queue_len, idx)
+                for _ in 0..probes.max(1) {
+                    let w = self.rng.range_usize(0, n);
+                    let qlen = self.worker_queues[w].len()
+                        + (self.workers[w].cores_total() - self.workers[w].cores_free())
+                            as usize;
+                    if best.map_or(true, |(bq, _)| qlen < bq) {
+                        best = Some((qlen, w));
+                    }
+                }
+                let (_, w) = best.expect("probes >= 1");
+                q.push_after(
+                    self.opts.probe_overhead,
+                    Event::WorkerEnqueue { worker: w, task },
+                );
+            }
+        }
+    }
+
+    /// Centralized dispatch: one decision per `decision_cost`; FIFO order;
+    /// OpenWhisk-style placement (global view).
+    fn centralized_dispatch(&mut self, q: &mut EventQueue<Event>) {
+        let now = q.now();
+        if self.global_queue.is_empty() {
+            return;
+        }
+        if self.scheduler_free_at > now {
+            // scheduler busy: wake when free
+            if !self.scheduler_turn_pending {
+                self.scheduler_turn_pending = true;
+                q.push_at(self.scheduler_free_at, Event::SchedulerTurn);
+            }
+            return;
+        }
+        // Find a worker with a free core (prefer warm sandbox, global view).
+        let Some(task) = self.global_queue.front() else {
+            return;
+        };
+        let pick = self.pick_worker_global(task);
+        let Some(worker) = pick else {
+            return; // no capacity: retry on next completion
+        };
+        let task = self.global_queue.pop_front().expect("checked front");
+        self.scheduler_free_at = now + self.opts.decision_cost;
+        let start = now + self.opts.decision_cost;
+        self.start_task(q, worker, task, start);
+        // Chain the next decision.
+        if !self.global_queue.is_empty() && !self.scheduler_turn_pending {
+            self.scheduler_turn_pending = true;
+            q.push_at(self.scheduler_free_at, Event::SchedulerTurn);
+        }
+    }
+
+    /// OpenWhisk-style placement: each function has a *home* worker
+    /// (hash), used while it has a free core; under load the task spills
+    /// to the next workers in hash order — usually a cold start there.
+    /// This is the §2.4 "reactive, fixed, workload-unaware" behaviour:
+    /// no demand estimation, no placement spreading.
+    fn pick_worker_global(&self, task: &Task) -> Option<usize> {
+        let n = self.workers.len();
+        let home = {
+            // splitmix-style hash of the function id
+            let mut x = ((task.f.dag.0 as u64) << 16) ^ (task.f.idx as u64);
+            x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            (x % n as u64) as usize
+        };
+        for off in 0..n {
+            let i = (home + off) % n;
+            let w = &self.workers[i];
+            if !w.has_free_core() {
+                continue;
+            }
+            if w.has_warm(task.f) || w.can_host_cold(task.mem_mb) {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// Sparrow worker pump: start queued tasks while cores are free.
+    fn worker_pump(&mut self, q: &mut EventQueue<Event>, worker: usize) {
+        let now = q.now();
+        while self.workers[worker].has_free_core() {
+            let Some(task) = self.worker_queues[worker].pop_front() else {
+                break;
+            };
+            self.start_task(q, worker, task, now);
+        }
+    }
+
+    /// Begin execution on `worker` at `start`: acquire a warm sandbox or
+    /// pay the cold-start; LRU-evict idle sandboxes under memory pressure.
+    fn start_task(&mut self, q: &mut EventQueue<Event>, worker: usize, task: Task, start: Micros) {
+        let w = &mut self.workers[worker];
+        let warm = w.has_warm(task.f);
+        let setup = if warm {
+            w.sandboxes.acquire_warm(task.f, start).expect("warm checked");
+            0
+        } else {
+            // evict idle (LRU) sandboxes until the new one fits
+            while !w.sandboxes.has_pool_mem(task.mem_mb) {
+                let victim = w
+                    .sandboxes
+                    .evictable()
+                    .min_by_key(|(_, _, _, last_used, _)| *last_used)
+                    .map(|(f, _, _, _, _)| f);
+                match victim {
+                    Some(v) => {
+                        w.sandboxes.hard_evict_one(v).expect("evictable");
+                    }
+                    None => break, // everything busy; overcommit below fails loudly
+                }
+            }
+            w.sandboxes
+                .acquire_cold(task.f, task.mem_mb, start)
+                .expect("baseline worker memory exhausted by busy sandboxes");
+            self.cold_starts += 1;
+            if let Some(state) = self.requests.get_mut(&task.req.0) {
+                state.cold_starts += 1;
+            }
+            task.setup_time
+        };
+        w.occupy_core();
+        let qdelay = start.saturating_sub(task.enqueued_at);
+        if start >= self.opts.warmup {
+            self.metrics.record_qdelay(task.f.dag, qdelay);
+        }
+        q.push_at(
+            start + setup + task.exec_time,
+            Event::FnComplete {
+                worker,
+                req: task.req,
+                f: task.f,
+            },
+        );
+    }
+
+    fn on_complete(&mut self, q: &mut EventQueue<Event>, worker: usize, req: RequestId, f: FnId) {
+        let now = q.now();
+        let w = &mut self.workers[worker];
+        w.release_core();
+        w.sandboxes.release(f, now).expect("busy sandbox");
+
+        let mut finished = false;
+        let mut ready: Vec<u16> = Vec::new();
+        if let Some(state) = self.requests.get_mut(&req.0) {
+            state.remaining -= 1;
+            finished = state.remaining == 0;
+            let dag = self.registry.get(state.dag);
+            for &c in &dag.children[f.idx as usize] {
+                state.pending_parents[c as usize] -= 1;
+                if state.pending_parents[c as usize] == 0 {
+                    ready.push(c);
+                }
+            }
+        }
+        if finished {
+            let state = self.requests.remove(&req.0).expect("present");
+            if now >= self.opts.warmup {
+                self.metrics.record_completion(&RequestOutcome {
+                    dag: state.dag,
+                    arrival: state.arrival,
+                    completion: now,
+                    deadline_abs: state.deadline_abs,
+                    cold_starts: state.cold_starts,
+                });
+            }
+        } else {
+            let dag_id = self.requests[&req.0].dag;
+            for c in ready {
+                let task = self.make_task(req, dag_id, c, now);
+                self.submit(q, task);
+            }
+        }
+        match self.opts.kind {
+            BaselineKind::CentralizedFifo => self.centralized_dispatch(q),
+            BaselineKind::Sparrow { .. } => self.worker_pump(q, worker),
+        }
+    }
+
+    /// Enforce the fixed keep-warm timeout: hard-evict warm sandboxes
+    /// idle longer than the timeout (§2.4's "static and workload-unaware
+    /// policy").
+    fn sweep_idle_sandboxes(&mut self, now: Micros) {
+        let timeout = self.opts.keep_warm_timeout;
+        for w in &mut self.workers {
+            let stale: Vec<FnId> = w
+                .sandboxes
+                .evictable()
+                .filter(|(_, _, _, last_used, _)| now.saturating_sub(*last_used) > timeout)
+                .map(|(f, _, _, _, _)| f)
+                .collect();
+            for f in stale {
+                while w.sandboxes.warm_idle(f) > 0 || w.sandboxes.soft(f) > 0 {
+                    if w.sandboxes.hard_evict_one(f).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MS;
+    use crate::dag::DagSpec;
+    use crate::workload::{ArrivalProcess, DagClass};
+
+    fn one_app(rate: f64, exec: Micros, setup: Micros, deadline: Micros) -> Vec<App> {
+        let dag = DagSpec::single(DagId(0), "b", exec, setup, 128, deadline);
+        vec![App {
+            class: DagClass::C1,
+            dag,
+            arrivals: ArrivalProcess::constant(rate),
+        }]
+    }
+
+    fn opts(kind: BaselineKind, horizon_s: u64) -> BaselineOptions {
+        BaselineOptions {
+            kind,
+            horizon: horizon_s * SEC,
+            warmup: 2 * SEC,
+            exec_noise_frac: 0.0,
+            ..BaselineOptions::default()
+        }
+    }
+
+    #[test]
+    fn centralized_completes_and_reuses_sandboxes() {
+        let mut sim = BaselineSim::new(
+            4,
+            4,
+            8 * 1024,
+            one_app(50.0, 50 * MS, 200 * MS, 300 * MS),
+            opts(BaselineKind::CentralizedFifo, 20),
+        );
+        let row = sim.run();
+        assert!(row.completed > 700, "completed {}", row.completed);
+        // reactive: the first wave is cold, then sandboxes are reused
+        let cold_rate = sim.cold_starts() as f64 / row.completed as f64;
+        assert!(cold_rate < 0.2, "cold rate {cold_rate}");
+    }
+
+    #[test]
+    fn centralized_scheduler_is_a_throughput_bottleneck() {
+        // 1/decision_cost = ~4100 decisions/s; offer 2000 rps on ample
+        // cores: fine. Offer it with decision cost 2ms → max 500/s → queue
+        // explodes and deadlines blow.
+        let mut slow = opts(BaselineKind::CentralizedFifo, 10);
+        slow.decision_cost = 2 * MS;
+        let mut sim = BaselineSim::new(
+            16,
+            8,
+            8 * 1024,
+            one_app(1000.0, 20 * MS, 150 * MS, 200 * MS),
+            slow,
+        );
+        let row = sim.run();
+        assert!(
+            row.deadline_met_rate < 0.5,
+            "serialized scheduler should saturate: {}",
+            row.deadline_met_rate
+        );
+    }
+
+    #[test]
+    fn sparrow_scales_where_centralized_chokes() {
+        let mk = |kind| {
+            let mut o = opts(kind, 10);
+            o.decision_cost = 2 * MS;
+            BaselineSim::new(
+                16,
+                8,
+                8 * 1024,
+                one_app(1000.0, 20 * MS, 150 * MS, 200 * MS),
+                o,
+            )
+        };
+        let mut sparrow = mk(BaselineKind::Sparrow { probes: 2 });
+        let row_s = sparrow.run();
+        let mut central = mk(BaselineKind::CentralizedFifo);
+        let row_c = central.run();
+        assert!(
+            row_s.deadline_met_rate > row_c.deadline_met_rate + 0.2,
+            "sparrow {} vs centralized {}",
+            row_s.deadline_met_rate,
+            row_c.deadline_met_rate
+        );
+    }
+
+    #[test]
+    fn sparrow_random_probing_costs_cold_starts() {
+        // Archipelago-equivalent load on Sparrow: probes scatter tasks
+        // across workers, so sandbox reuse is worse than a global view.
+        let mut sim = BaselineSim::new(
+            8,
+            4,
+            8 * 1024,
+            one_app(100.0, 50 * MS, 200 * MS, 300 * MS),
+            opts(BaselineKind::Sparrow { probes: 2 }, 20),
+        );
+        let row = sim.run();
+        assert!(row.completed > 1500);
+        assert!(sim.cold_starts() > 8, "scattering causes cold starts");
+    }
+
+    #[test]
+    fn keep_warm_timeout_evicts_idle_sandboxes() {
+        let mut o = opts(BaselineKind::CentralizedFifo, 30);
+        o.keep_warm_timeout = 3 * SEC; // aggressive for the test
+        // on/off: 5s on, 15s off → sandboxes die during off period
+        let dag = DagSpec::single(DagId(0), "b", 20 * MS, 200 * MS, 128, 300 * MS);
+        let apps = vec![App {
+            class: DagClass::C1,
+            dag,
+            arrivals: ArrivalProcess::on_off(50.0, 5 * SEC, 15 * SEC),
+        }];
+        let mut sim = BaselineSim::new(2, 4, 4 * 1024, apps, o);
+        let row = sim.run();
+        // each on-period restarts cold
+        assert!(
+            sim.cold_starts() > 3,
+            "timeout should force repeated cold starts: {}",
+            sim.cold_starts()
+        );
+        assert!(row.completed > 100);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let run = |seed| {
+            let mut o = opts(BaselineKind::Sparrow { probes: 2 }, 10);
+            o.seed = seed;
+            let mut sim = BaselineSim::new(
+                4,
+                4,
+                8 * 1024,
+                one_app(100.0, 30 * MS, 200 * MS, 300 * MS),
+                o,
+            );
+            let row = sim.run();
+            (row.completed, row.p99, sim.cold_starts())
+        };
+        assert_eq!(run(3), run(3));
+    }
+
+    #[test]
+    fn dag_requests_complete_on_baselines() {
+        let dag = DagSpec::chain(
+            DagId(0),
+            "c",
+            &[(20 * MS, 150 * MS, 128), (20 * MS, 150 * MS, 128)],
+            500 * MS,
+        );
+        for kind in [BaselineKind::CentralizedFifo, BaselineKind::Sparrow { probes: 2 }] {
+            let apps = vec![App {
+                class: DagClass::C3,
+                dag: dag.clone(),
+                arrivals: ArrivalProcess::constant(30.0),
+            }];
+            let mut sim = BaselineSim::new(4, 4, 8 * 1024, apps, opts(kind, 10));
+            let row = sim.run();
+            assert!(row.completed > 150, "{kind:?}: {}", row.completed);
+            assert!(row.p50 >= 40 * MS, "{kind:?}: p50 {}", row.p50);
+        }
+    }
+}

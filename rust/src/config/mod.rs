@@ -1,0 +1,489 @@
+//! Platform configuration: cluster topology, scheduler policies,
+//! estimator and scaling parameters — everything §7.1 fixes for the
+//! testbed, exposed as a typed, validated, JSON-loadable config.
+//!
+//! Defaults reproduce the paper's deployment: 8 SGSs × 8 workers,
+//! 20–28 cores and 256 GB per machine, proactive pool capped per worker,
+//! `ScaleOutThreshold = 0.3`, sandbox setup 125–400 ms, estimation every
+//! 100 ms at a 99% SLA.
+
+use crate::util::json::{self, Json};
+
+/// Microseconds — the platform-wide time unit.
+pub type Micros = u64;
+
+pub const MS: Micros = 1_000;
+pub const SEC: Micros = 1_000_000;
+
+/// Scheduling-queue policy inside an SGS (§4.2 vs baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Shortest-remaining-slack-first (the paper's policy).
+    Srsf,
+    /// First-in-first-out (baseline stack).
+    Fifo,
+}
+
+/// Proactive sandbox placement across a worker pool (§4.3.2, Fig 4b/9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Evenly spread sandboxes (min-count worker first) — the paper's.
+    Even,
+    /// Pack sandboxes onto as few workers as possible (ablation).
+    Packed,
+}
+
+/// Hard-eviction victim selection (§4.3.3, §7.3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Evict from the function whose allocation most exceeds its
+    /// estimate ("closest to its estimation" fairness metric).
+    Fair,
+    /// Least-recently-used sandbox (ablation; 4.62× worse tail in §7.3.1).
+    Lru,
+}
+
+/// LBS scale-out behaviour (§5.2.3, §7.3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleOutMode {
+    /// Lottery-weighted gradual ramp of the new SGS — the paper's.
+    Gradual,
+    /// Instant equal-share routing to all associated SGSs (ablation).
+    Instant,
+}
+
+/// Cluster topology.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of semi-global schedulers (= worker pools).
+    pub num_sgs: usize,
+    /// Workers (machines) per SGS pool.
+    pub workers_per_sgs: usize,
+    /// CPU cores per worker available for function execution.
+    pub cores_per_worker: u32,
+    /// Total memory per worker (MB).
+    pub worker_mem_mb: u64,
+    /// Slice of each worker's memory reserved as the proactive
+    /// sandbox pool (MB) — §4.3's "proactive memory pool".
+    pub proactive_pool_mb: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        // §7.1: 8 SGSs × 8 workers; 20–28 cores, 256 GB machines. We use
+        // the conservative 20-core figure uniformly.
+        ClusterConfig {
+            num_sgs: 8,
+            workers_per_sgs: 8,
+            cores_per_worker: 20,
+            worker_mem_mb: 256 * 1024,
+            proactive_pool_mb: 32 * 1024,
+        }
+    }
+}
+
+/// SGS-side policy parameters (§4).
+#[derive(Debug, Clone)]
+pub struct SgsConfig {
+    pub sched_policy: SchedPolicy,
+    pub placement: PlacementPolicy,
+    pub eviction: EvictionPolicy,
+    /// Estimation interval T (§4.3.1; 100 ms in the prototype).
+    pub estimate_interval: Micros,
+    /// EWMA smoothing for the arrival-rate estimate.
+    pub rate_ewma_alpha: f64,
+    /// Provisioning SLA quantile fed to the Poisson inverse CDF.
+    pub sla_quantile: f64,
+    /// Headroom multiplier applied on top of the SLA-quantile demand
+    /// (§4.3.1: "the SGS provisions sandboxes for the worst case load";
+    /// Fig 8b shows allocations up to 37.4% above the ideal). Needed
+    /// because warm sandboxes are spread over the pool while free cores
+    /// are not — without headroom a burst lands on sandbox-less workers.
+    pub provision_margin: f64,
+    /// EWMA smoothing for per-DAG queuing delay reports (§5.2.1).
+    pub qdelay_ewma_alpha: f64,
+    /// Observations per queuing-delay window before the LBS may act.
+    pub qdelay_window: usize,
+    /// Per-request scheduling overhead added at the SGS (§7.4 measured
+    /// median 241 µs on the Go prototype).
+    pub sched_overhead: Micros,
+}
+
+impl Default for SgsConfig {
+    fn default() -> Self {
+        SgsConfig {
+            sched_policy: SchedPolicy::Srsf,
+            placement: PlacementPolicy::Even,
+            eviction: EvictionPolicy::Fair,
+            estimate_interval: 100 * MS,
+            rate_ewma_alpha: 0.3,
+            sla_quantile: 0.99,
+            provision_margin: 0.35,
+            qdelay_ewma_alpha: 0.3,
+            qdelay_window: 16,
+            sched_overhead: 241,
+        }
+    }
+}
+
+/// LBS-side parameters (§5).
+#[derive(Debug, Clone)]
+pub struct LbsConfig {
+    /// Scale-out threshold on the normalized scaling metric (§7.5: 0.3).
+    pub scale_out_threshold: f64,
+    /// Scale-in threshold, kept well below SOT to avoid oscillation.
+    pub scale_in_threshold: f64,
+    /// Lottery-ticket discount for SGSs on the removed list.
+    pub removed_discount: f64,
+    /// Virtual nodes per SGS on the consistent-hash ring.
+    pub ring_vnodes: usize,
+    /// Per-request routing overhead added at the LBS (§7.4: 190 µs).
+    pub route_overhead: Micros,
+    /// How often the LBS evaluates scaling decisions.
+    pub control_interval: Micros,
+    pub scale_out_mode: ScaleOutMode,
+}
+
+impl Default for LbsConfig {
+    fn default() -> Self {
+        LbsConfig {
+            scale_out_threshold: 0.3,
+            scale_in_threshold: 0.05,
+            removed_discount: 0.25,
+            ring_vnodes: 32,
+            route_overhead: 190,
+            control_interval: 100 * MS,
+            scale_out_mode: ScaleOutMode::Gradual,
+        }
+    }
+}
+
+/// Whole-platform configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub cluster: ClusterConfig,
+    pub sgs: SgsConfig,
+    pub lbs: LbsConfig,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("invalid config: {0}")]
+    Invalid(String),
+    #[error("config parse: {0}")]
+    Parse(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Config {
+    /// Validate invariants; every loader calls this.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let c = &self.cluster;
+        let inv = |m: String| Err(ConfigError::Invalid(m));
+        if c.num_sgs == 0 {
+            return inv("num_sgs must be > 0".into());
+        }
+        if c.workers_per_sgs == 0 {
+            return inv("workers_per_sgs must be > 0".into());
+        }
+        if c.cores_per_worker == 0 {
+            return inv("cores_per_worker must be > 0".into());
+        }
+        if c.proactive_pool_mb > c.worker_mem_mb {
+            return inv(format!(
+                "proactive_pool_mb {} exceeds worker_mem_mb {}",
+                c.proactive_pool_mb, c.worker_mem_mb
+            ));
+        }
+        let s = &self.sgs;
+        if !(0.0..=1.0).contains(&s.rate_ewma_alpha)
+            || !(0.0..=1.0).contains(&s.qdelay_ewma_alpha)
+        {
+            return inv("EWMA alphas must be in [0, 1]".into());
+        }
+        if !(0.5..1.0).contains(&s.sla_quantile) {
+            return inv("sla_quantile must be in [0.5, 1)".into());
+        }
+        if s.estimate_interval == 0 {
+            return inv("estimate_interval must be > 0".into());
+        }
+        if s.qdelay_window == 0 {
+            return inv("qdelay_window must be > 0".into());
+        }
+        let l = &self.lbs;
+        if l.scale_in_threshold >= l.scale_out_threshold {
+            return inv(format!(
+                "scale_in_threshold {} must be < scale_out_threshold {}",
+                l.scale_in_threshold, l.scale_out_threshold
+            ));
+        }
+        if !(0.0..=1.0).contains(&l.removed_discount) {
+            return inv("removed_discount must be in [0, 1]".into());
+        }
+        if l.ring_vnodes == 0 {
+            return inv("ring_vnodes must be > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Total cores across the cluster.
+    pub fn total_cores(&self) -> u64 {
+        self.cluster.num_sgs as u64
+            * self.cluster.workers_per_sgs as u64
+            * self.cluster.cores_per_worker as u64
+    }
+
+    /// Load from a JSON file; missing fields keep defaults.
+    pub fn from_file(path: &str) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Config, ConfigError> {
+        let v = json::parse(text).map_err(|e| ConfigError::Parse(e.to_string()))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let perr = |m: String| ConfigError::Parse(m);
+        if let Some(c) = v.get("cluster") {
+            let cc = &mut cfg.cluster;
+            read_usize(c, "num_sgs", &mut cc.num_sgs).map_err(perr)?;
+            read_usize(c, "workers_per_sgs", &mut cc.workers_per_sgs).map_err(perr)?;
+            read_u32(c, "cores_per_worker", &mut cc.cores_per_worker).map_err(perr)?;
+            read_u64(c, "worker_mem_mb", &mut cc.worker_mem_mb).map_err(perr)?;
+            read_u64(c, "proactive_pool_mb", &mut cc.proactive_pool_mb).map_err(perr)?;
+        }
+        if let Some(s) = v.get("sgs") {
+            let sc = &mut cfg.sgs;
+            if let Some(p) = s.get("sched_policy") {
+                sc.sched_policy = match p.as_str() {
+                    Some("srsf") => SchedPolicy::Srsf,
+                    Some("fifo") => SchedPolicy::Fifo,
+                    other => {
+                        return Err(perr(format!("bad sched_policy {other:?}")));
+                    }
+                };
+            }
+            if let Some(p) = s.get("placement") {
+                sc.placement = match p.as_str() {
+                    Some("even") => PlacementPolicy::Even,
+                    Some("packed") => PlacementPolicy::Packed,
+                    other => return Err(perr(format!("bad placement {other:?}"))),
+                };
+            }
+            if let Some(p) = s.get("eviction") {
+                sc.eviction = match p.as_str() {
+                    Some("fair") => EvictionPolicy::Fair,
+                    Some("lru") => EvictionPolicy::Lru,
+                    other => return Err(perr(format!("bad eviction {other:?}"))),
+                };
+            }
+            read_u64(s, "estimate_interval_us", &mut sc.estimate_interval).map_err(perr)?;
+            read_f64(s, "rate_ewma_alpha", &mut sc.rate_ewma_alpha).map_err(perr)?;
+            read_f64(s, "sla_quantile", &mut sc.sla_quantile).map_err(perr)?;
+            read_f64(s, "qdelay_ewma_alpha", &mut sc.qdelay_ewma_alpha).map_err(perr)?;
+            read_usize(s, "qdelay_window", &mut sc.qdelay_window).map_err(perr)?;
+            read_u64(s, "sched_overhead_us", &mut sc.sched_overhead).map_err(perr)?;
+        }
+        if let Some(l) = v.get("lbs") {
+            let lc = &mut cfg.lbs;
+            read_f64(l, "scale_out_threshold", &mut lc.scale_out_threshold).map_err(perr)?;
+            read_f64(l, "scale_in_threshold", &mut lc.scale_in_threshold).map_err(perr)?;
+            read_f64(l, "removed_discount", &mut lc.removed_discount).map_err(perr)?;
+            read_usize(l, "ring_vnodes", &mut lc.ring_vnodes).map_err(perr)?;
+            read_u64(l, "route_overhead_us", &mut lc.route_overhead).map_err(perr)?;
+            read_u64(l, "control_interval_us", &mut lc.control_interval).map_err(perr)?;
+            if let Some(p) = l.get("scale_out_mode") {
+                lc.scale_out_mode = match p.as_str() {
+                    Some("gradual") => ScaleOutMode::Gradual,
+                    Some("instant") => ScaleOutMode::Instant,
+                    other => return Err(perr(format!("bad scale_out_mode {other:?}"))),
+                };
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize the effective config (for run manifests / debugging).
+    pub fn to_json(&self) -> Json {
+        let c = &self.cluster;
+        let s = &self.sgs;
+        let l = &self.lbs;
+        json::obj(vec![
+            (
+                "cluster",
+                json::obj(vec![
+                    ("num_sgs", Json::Int(c.num_sgs as i64)),
+                    ("workers_per_sgs", Json::Int(c.workers_per_sgs as i64)),
+                    ("cores_per_worker", Json::Int(c.cores_per_worker as i64)),
+                    ("worker_mem_mb", Json::Int(c.worker_mem_mb as i64)),
+                    ("proactive_pool_mb", Json::Int(c.proactive_pool_mb as i64)),
+                ]),
+            ),
+            (
+                "sgs",
+                json::obj(vec![
+                    (
+                        "sched_policy",
+                        Json::Str(
+                            match s.sched_policy {
+                                SchedPolicy::Srsf => "srsf",
+                                SchedPolicy::Fifo => "fifo",
+                            }
+                            .into(),
+                        ),
+                    ),
+                    (
+                        "placement",
+                        Json::Str(
+                            match s.placement {
+                                PlacementPolicy::Even => "even",
+                                PlacementPolicy::Packed => "packed",
+                            }
+                            .into(),
+                        ),
+                    ),
+                    (
+                        "eviction",
+                        Json::Str(
+                            match s.eviction {
+                                EvictionPolicy::Fair => "fair",
+                                EvictionPolicy::Lru => "lru",
+                            }
+                            .into(),
+                        ),
+                    ),
+                    ("estimate_interval_us", Json::Int(s.estimate_interval as i64)),
+                    ("rate_ewma_alpha", Json::Num(s.rate_ewma_alpha)),
+                    ("sla_quantile", Json::Num(s.sla_quantile)),
+                    ("qdelay_ewma_alpha", Json::Num(s.qdelay_ewma_alpha)),
+                    ("qdelay_window", Json::Int(s.qdelay_window as i64)),
+                    ("sched_overhead_us", Json::Int(s.sched_overhead as i64)),
+                ]),
+            ),
+            (
+                "lbs",
+                json::obj(vec![
+                    ("scale_out_threshold", Json::Num(l.scale_out_threshold)),
+                    ("scale_in_threshold", Json::Num(l.scale_in_threshold)),
+                    ("removed_discount", Json::Num(l.removed_discount)),
+                    ("ring_vnodes", Json::Int(l.ring_vnodes as i64)),
+                    ("route_overhead_us", Json::Int(l.route_overhead as i64)),
+                    ("control_interval_us", Json::Int(l.control_interval as i64)),
+                    (
+                        "scale_out_mode",
+                        Json::Str(
+                            match l.scale_out_mode {
+                                ScaleOutMode::Gradual => "gradual",
+                                ScaleOutMode::Instant => "instant",
+                            }
+                            .into(),
+                        ),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+fn read_u64(v: &Json, key: &str, dst: &mut u64) -> Result<(), String> {
+    if let Some(x) = v.get(key) {
+        *dst = x
+            .as_u64()
+            .ok_or_else(|| format!("field '{key}' must be a non-negative integer"))?;
+    }
+    Ok(())
+}
+
+fn read_u32(v: &Json, key: &str, dst: &mut u32) -> Result<(), String> {
+    let mut tmp = *dst as u64;
+    read_u64(v, key, &mut tmp)?;
+    *dst = u32::try_from(tmp).map_err(|_| format!("field '{key}' too large"))?;
+    Ok(())
+}
+
+fn read_usize(v: &Json, key: &str, dst: &mut usize) -> Result<(), String> {
+    let mut tmp = *dst as u64;
+    read_u64(v, key, &mut tmp)?;
+    *dst = tmp as usize;
+    Ok(())
+}
+
+fn read_f64(v: &Json, key: &str, dst: &mut f64) -> Result<(), String> {
+    if let Some(x) = v.get(key) {
+        *dst = x
+            .as_f64()
+            .ok_or_else(|| format!("field '{key}' must be a number"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid_and_matches_paper_testbed() {
+        let cfg = Config::default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.cluster.num_sgs, 8);
+        assert_eq!(cfg.cluster.workers_per_sgs, 8);
+        assert_eq!(cfg.lbs.scale_out_threshold, 0.3);
+        assert_eq!(cfg.sgs.estimate_interval, 100 * MS);
+        assert_eq!(cfg.total_cores(), 8 * 8 * 20);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = Config::default();
+        let text = cfg.to_json().to_pretty();
+        let back = Config::from_json_str(&text).unwrap();
+        assert_eq!(back.cluster.num_sgs, cfg.cluster.num_sgs);
+        assert_eq!(back.sgs.sched_policy, cfg.sgs.sched_policy);
+        assert_eq!(back.lbs.scale_out_threshold, cfg.lbs.scale_out_threshold);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let cfg = Config::from_json_str(r#"{"cluster": {"num_sgs": 2}}"#).unwrap();
+        assert_eq!(cfg.cluster.num_sgs, 2);
+        assert_eq!(cfg.cluster.workers_per_sgs, 8);
+    }
+
+    #[test]
+    fn policy_strings() {
+        let cfg = Config::from_json_str(
+            r#"{"sgs": {"sched_policy": "fifo", "placement": "packed", "eviction": "lru"},
+                "lbs": {"scale_out_mode": "instant"}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.sgs.sched_policy, SchedPolicy::Fifo);
+        assert_eq!(cfg.sgs.placement, PlacementPolicy::Packed);
+        assert_eq!(cfg.sgs.eviction, EvictionPolicy::Lru);
+        assert_eq!(cfg.lbs.scale_out_mode, ScaleOutMode::Instant);
+        assert!(Config::from_json_str(r#"{"sgs": {"sched_policy": "lifo"}}"#).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut cfg = Config::default();
+        cfg.cluster.num_sgs = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = Config::default();
+        cfg.cluster.proactive_pool_mb = cfg.cluster.worker_mem_mb + 1;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = Config::default();
+        cfg.lbs.scale_in_threshold = 0.5; // >= SOT
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = Config::default();
+        cfg.sgs.sla_quantile = 1.0;
+        assert!(cfg.validate().is_err());
+    }
+}

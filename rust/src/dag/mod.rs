@@ -1,0 +1,465 @@
+//! The application model: a DAG of functions with a latency deadline (§3).
+//!
+//! Users upload a DAG spec (functions with resource requirements + edges +
+//! the maximum acceptable end-to-end time); Archipelago schedules each
+//! request's constituent functions so that the DAG completes within its
+//! deadline. This module holds the spec types, the JSON upload language,
+//! structural validation (acyclicity, connectivity), and the critical-path
+//! precomputation the SRSF scheduler's slack calculation relies on (§4.2).
+
+mod spec;
+
+pub use spec::{parse_dag_json, DagSpecError};
+
+use crate::config::Micros;
+use crate::util::json::{self, Json};
+
+/// Dense DAG identifier (index into the platform's registry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DagId(pub u32);
+
+/// A function *within* a DAG: `(dag, index)` — globally unique and dense,
+/// used as the sandbox-table key everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FnId {
+    pub dag: DagId,
+    pub idx: u16,
+}
+
+/// One function node of a DAG.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub name: String,
+    /// Provisioned memory (MB) — the sandbox's pool footprint (T4: 78%
+    /// of real functions need only 128 MB).
+    pub mem_mb: u64,
+    /// Expected execution time, used for slack math. The generator may
+    /// add per-request noise around this.
+    pub exec_time: Micros,
+    /// Sandbox setup overhead for this function (cold start cost):
+    /// container launch + runtime + code fetch (§7.1: 125–400 ms).
+    pub setup_time: Micros,
+    /// Which compiled artifact runs this function in real-execution mode
+    /// (name in `artifacts/manifest.json`); empty = simulated body.
+    pub artifact: String,
+}
+
+impl FunctionSpec {
+    pub fn new(name: &str, exec_time: Micros, setup_time: Micros, mem_mb: u64) -> Self {
+        FunctionSpec {
+            name: name.to_string(),
+            mem_mb,
+            exec_time,
+            setup_time,
+            artifact: String::new(),
+        }
+    }
+}
+
+/// A validated DAG with precomputed scheduling metadata.
+#[derive(Debug, Clone)]
+pub struct DagSpec {
+    pub id: DagId,
+    pub name: String,
+    pub functions: Vec<FunctionSpec>,
+    /// Edges as (parent, child) function indices.
+    pub edges: Vec<(u16, u16)>,
+    /// User-specified end-to-end deadline for a request (§3: "maximum
+    /// execution time for the DAG given a new input trigger").
+    pub deadline: Micros,
+
+    // ---- precomputed ----
+    /// Children per function.
+    pub children: Vec<Vec<u16>>,
+    /// Parent count per function (consumed as dependencies complete).
+    pub parent_count: Vec<u16>,
+    /// Root functions (no parents).
+    pub roots: Vec<u16>,
+    /// Critical-path execution time from each function to the DAG sink,
+    /// *including* the function's own exec time (§4.2 "DAG awareness").
+    pub cpl: Vec<Micros>,
+    /// Critical-path execution time of the whole DAG.
+    pub total_cpl: Micros,
+    /// Topological order (parents before children).
+    pub topo: Vec<u16>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DagError {
+    #[error("dag '{0}' has no functions")]
+    Empty(String),
+    #[error("dag '{0}': edge references unknown function {1}")]
+    BadEdge(String, u16),
+    #[error("dag '{0}' contains a cycle")]
+    Cyclic(String),
+    #[error("dag '{0}': duplicate edge ({1}, {2})")]
+    DuplicateEdge(String, u16, u16),
+    #[error("dag '{0}': self edge on {1}")]
+    SelfEdge(String, u16),
+    #[error("dag '{0}': deadline must be > 0")]
+    ZeroDeadline(String),
+}
+
+impl DagSpec {
+    /// Build + validate a DAG, computing children/roots/critical paths.
+    pub fn new(
+        id: DagId,
+        name: &str,
+        functions: Vec<FunctionSpec>,
+        edges: Vec<(u16, u16)>,
+        deadline: Micros,
+    ) -> Result<DagSpec, DagError> {
+        let n = functions.len();
+        if n == 0 {
+            return Err(DagError::Empty(name.into()));
+        }
+        if deadline == 0 {
+            return Err(DagError::ZeroDeadline(name.into()));
+        }
+        let mut children: Vec<Vec<u16>> = vec![Vec::new(); n];
+        let mut parent_count: Vec<u16> = vec![0; n];
+        let mut seen = std::collections::HashSet::new();
+        for &(p, c) in &edges {
+            if p as usize >= n {
+                return Err(DagError::BadEdge(name.into(), p));
+            }
+            if c as usize >= n {
+                return Err(DagError::BadEdge(name.into(), c));
+            }
+            if p == c {
+                return Err(DagError::SelfEdge(name.into(), p));
+            }
+            if !seen.insert((p, c)) {
+                return Err(DagError::DuplicateEdge(name.into(), p, c));
+            }
+            children[p as usize].push(c);
+            parent_count[c as usize] += 1;
+        }
+        // Kahn topological sort — detects cycles.
+        let mut indeg = parent_count.clone();
+        let mut topo: Vec<u16> = Vec::with_capacity(n);
+        let mut queue: std::collections::VecDeque<u16> = (0..n as u16)
+            .filter(|&i| indeg[i as usize] == 0)
+            .collect();
+        let roots: Vec<u16> = queue.iter().copied().collect();
+        while let Some(u) = queue.pop_front() {
+            topo.push(u);
+            for &v in &children[u as usize] {
+                indeg[v as usize] -= 1;
+                if indeg[v as usize] == 0 {
+                    queue.push_back(v);
+                }
+            }
+        }
+        if topo.len() != n {
+            return Err(DagError::Cyclic(name.into()));
+        }
+        // Critical path to sink (reverse topological order), inclusive of
+        // own exec time.
+        let mut cpl: Vec<Micros> = vec![0; n];
+        for &u in topo.iter().rev() {
+            let below = children[u as usize]
+                .iter()
+                .map(|&v| cpl[v as usize])
+                .max()
+                .unwrap_or(0);
+            cpl[u as usize] = functions[u as usize].exec_time + below;
+        }
+        let total_cpl = roots.iter().map(|&r| cpl[r as usize]).max().unwrap_or(0);
+        Ok(DagSpec {
+            id,
+            name: name.to_string(),
+            functions,
+            edges,
+            deadline,
+            children,
+            parent_count,
+            roots,
+            cpl,
+            total_cpl,
+            topo,
+        })
+    }
+
+    /// Single-function convenience constructor (T5: the common case).
+    pub fn single(
+        id: DagId,
+        name: &str,
+        exec_time: Micros,
+        setup_time: Micros,
+        mem_mb: u64,
+        deadline: Micros,
+    ) -> DagSpec {
+        DagSpec::new(
+            id,
+            name,
+            vec![FunctionSpec::new(name, exec_time, setup_time, mem_mb)],
+            vec![],
+            deadline,
+        )
+        .expect("single-function dag is always valid")
+    }
+
+    /// Linear chain of functions (the shape SAR's two-function DAGs and
+    /// the paper's C3 class use).
+    pub fn chain(
+        id: DagId,
+        name: &str,
+        stages: &[(Micros, Micros, u64)], // (exec, setup, mem)
+        deadline: Micros,
+    ) -> DagSpec {
+        let functions = stages
+            .iter()
+            .enumerate()
+            .map(|(i, &(exec, setup, mem))| {
+                FunctionSpec::new(&format!("{name}-s{i}"), exec, setup, mem)
+            })
+            .collect();
+        let edges = (0..stages.len().saturating_sub(1))
+            .map(|i| (i as u16, i as u16 + 1))
+            .collect();
+        DagSpec::new(id, name, functions, edges, deadline)
+            .expect("chain dag is always valid")
+    }
+
+    pub fn len(&self) -> usize {
+        self.functions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.functions.is_empty()
+    }
+
+    /// Static slack budget of the DAG: deadline minus critical-path exec.
+    /// Used to normalize the LBS scaling metric (§5.2.2).
+    pub fn slack(&self) -> Micros {
+        self.deadline.saturating_sub(self.total_cpl)
+    }
+
+    pub fn fn_id(&self, idx: u16) -> FnId {
+        FnId { dag: self.id, idx }
+    }
+
+    /// Serialize back to the JSON upload language.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("deadline_us", Json::Int(self.deadline as i64)),
+            (
+                "functions",
+                Json::Arr(
+                    self.functions
+                        .iter()
+                        .map(|f| {
+                            json::obj(vec![
+                                ("name", Json::Str(f.name.clone())),
+                                ("mem_mb", Json::Int(f.mem_mb as i64)),
+                                ("exec_time_us", Json::Int(f.exec_time as i64)),
+                                ("setup_time_us", Json::Int(f.setup_time as i64)),
+                                ("artifact", Json::Str(f.artifact.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "edges",
+                Json::Arr(
+                    self.edges
+                        .iter()
+                        .map(|&(p, c)| {
+                            Json::Arr(vec![Json::Int(p as i64), Json::Int(c as i64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The platform's table of uploaded DAGs.
+#[derive(Debug, Default)]
+pub struct DagRegistry {
+    dags: Vec<DagSpec>,
+}
+
+impl DagRegistry {
+    pub fn new() -> Self {
+        DagRegistry::default()
+    }
+
+    /// Register a DAG built by the caller with a placeholder id; the
+    /// registry assigns the real dense id.
+    pub fn register(&mut self, mut dag: DagSpec) -> DagId {
+        let id = DagId(self.dags.len() as u32);
+        dag.id = id;
+        self.dags.push(dag);
+        id
+    }
+
+    pub fn get(&self, id: DagId) -> &DagSpec {
+        &self.dags[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.dags.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dags.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &DagSpec> {
+        self.dags.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MS;
+
+    fn f(exec: Micros) -> FunctionSpec {
+        FunctionSpec::new("f", exec, 200 * MS, 128)
+    }
+
+    #[test]
+    fn single_function_dag() {
+        let d = DagSpec::single(DagId(0), "s", 50 * MS, 200 * MS, 128, 150 * MS);
+        assert_eq!(d.roots, vec![0]);
+        assert_eq!(d.cpl, vec![50 * MS]);
+        assert_eq!(d.total_cpl, 50 * MS);
+        assert_eq!(d.slack(), 100 * MS);
+        assert_eq!(d.topo, vec![0]);
+    }
+
+    #[test]
+    fn chain_critical_path() {
+        let d = DagSpec::chain(
+            DagId(0),
+            "c",
+            &[(10 * MS, 100 * MS, 128), (20 * MS, 100 * MS, 128), (30 * MS, 100 * MS, 128)],
+            100 * MS,
+        );
+        assert_eq!(d.total_cpl, 60 * MS);
+        assert_eq!(d.cpl, vec![60 * MS, 50 * MS, 30 * MS]);
+        assert_eq!(d.roots, vec![0]);
+        assert_eq!(d.children[0], vec![1]);
+        assert_eq!(d.parent_count, vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn diamond_critical_path_takes_max_branch() {
+        //      0 (10)
+        //     / \
+        //  1(5)  2(50)
+        //     \ /
+        //      3 (10)
+        let d = DagSpec::new(
+            DagId(1),
+            "diamond",
+            vec![f(10 * MS), f(5 * MS), f(50 * MS), f(10 * MS)],
+            vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+            200 * MS,
+        )
+        .unwrap();
+        assert_eq!(d.total_cpl, 70 * MS); // 10 + 50 + 10
+        assert_eq!(d.cpl[0], 70 * MS);
+        assert_eq!(d.cpl[1], 15 * MS);
+        assert_eq!(d.cpl[2], 60 * MS);
+        assert_eq!(d.cpl[3], 10 * MS);
+        assert_eq!(d.roots, vec![0]);
+        // topo: parents before children
+        let pos: Vec<usize> = (0..4u16)
+            .map(|i| d.topo.iter().position(|&x| x == i).unwrap())
+            .collect();
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn multiple_roots_and_sinks() {
+        let d = DagSpec::new(
+            DagId(0),
+            "multi",
+            vec![f(10 * MS), f(20 * MS), f(5 * MS)],
+            vec![(0, 2), (1, 2)],
+            100 * MS,
+        )
+        .unwrap();
+        assert_eq!(d.roots, vec![0, 1]);
+        assert_eq!(d.total_cpl, 25 * MS); // max(10, 20) + 5
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert_eq!(
+            DagSpec::new(DagId(0), "e", vec![], vec![], MS).unwrap_err(),
+            DagError::Empty("e".into())
+        );
+        assert!(matches!(
+            DagSpec::new(DagId(0), "x", vec![f(1)], vec![(0, 1)], MS).unwrap_err(),
+            DagError::BadEdge(_, 1)
+        ));
+        assert!(matches!(
+            DagSpec::new(DagId(0), "x", vec![f(1), f(1)], vec![(0, 1), (1, 0)], MS)
+                .unwrap_err(),
+            DagError::Cyclic(_)
+        ));
+        assert!(matches!(
+            DagSpec::new(DagId(0), "x", vec![f(1)], vec![(0, 0)], MS).unwrap_err(),
+            DagError::SelfEdge(_, 0)
+        ));
+        assert!(matches!(
+            DagSpec::new(
+                DagId(0),
+                "x",
+                vec![f(1), f(1)],
+                vec![(0, 1), (0, 1)],
+                MS
+            )
+            .unwrap_err(),
+            DagError::DuplicateEdge(_, 0, 1)
+        ));
+        assert!(matches!(
+            DagSpec::new(DagId(0), "x", vec![f(1)], vec![], 0).unwrap_err(),
+            DagError::ZeroDeadline(_)
+        ));
+    }
+
+    #[test]
+    fn slack_saturates_at_zero() {
+        let d = DagSpec::single(DagId(0), "tight", 100 * MS, 0, 128, 50 * MS);
+        assert_eq!(d.slack(), 0);
+    }
+
+    #[test]
+    fn registry_assigns_dense_ids() {
+        let mut reg = DagRegistry::new();
+        let a = reg.register(DagSpec::single(DagId(99), "a", MS, MS, 128, 10 * MS));
+        let b = reg.register(DagSpec::single(DagId(99), "b", MS, MS, 128, 10 * MS));
+        assert_eq!(a, DagId(0));
+        assert_eq!(b, DagId(1));
+        assert_eq!(reg.get(a).name, "a");
+        assert_eq!(reg.get(b).id, DagId(1));
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip_via_spec_language() {
+        let d = DagSpec::chain(
+            DagId(0),
+            "rt",
+            &[(10 * MS, 100 * MS, 128), (20 * MS, 150 * MS, 256)],
+            300 * MS,
+        );
+        let text = d.to_json().to_string();
+        let back = parse_dag_json(DagId(0), &text).unwrap();
+        assert_eq!(back.name, d.name);
+        assert_eq!(back.deadline, d.deadline);
+        assert_eq!(back.edges, d.edges);
+        assert_eq!(back.functions.len(), 2);
+        assert_eq!(back.functions[1].mem_mb, 256);
+        assert_eq!(back.total_cpl, d.total_cpl);
+    }
+}

@@ -1,0 +1,158 @@
+//! The JSON-based DAG upload language (§3: "the user also specifies the
+//! resource requirements of the functions along with the DAG structure
+//! using a JSON-based language ... [and] the maximum execution time for
+//! the DAG given a new input trigger").
+//!
+//! Example document:
+//!
+//! ```json
+//! {
+//!   "name": "thumbnailer",
+//!   "deadline_us": 150000,
+//!   "functions": [
+//!     {"name": "resize", "exec_time_us": 50000, "setup_time_us": 200000,
+//!      "mem_mb": 128, "artifact": "mlp_infer_b1"},
+//!     {"name": "notify", "exec_time_us": 10000, "setup_time_us": 125000,
+//!      "mem_mb": 128}
+//!   ],
+//!   "edges": [[0, 1]]
+//! }
+//! ```
+
+use super::{DagError, DagId, DagSpec, FunctionSpec};
+use crate::util::json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum DagSpecError {
+    #[error("dag json: {0}")]
+    Json(String),
+    #[error("dag structure: {0}")]
+    Structure(#[from] DagError),
+}
+
+/// Parse + validate a DAG upload document.
+pub fn parse_dag_json(id: DagId, text: &str) -> Result<DagSpec, DagSpecError> {
+    let v = json::parse(text).map_err(|e| DagSpecError::Json(e.to_string()))?;
+    let name = v.req_str("name").map_err(DagSpecError::Json)?;
+    let deadline = v.req_u64("deadline_us").map_err(DagSpecError::Json)?;
+    let fns_json = v
+        .req("functions")
+        .map_err(DagSpecError::Json)?
+        .as_arr()
+        .ok_or_else(|| DagSpecError::Json("'functions' must be an array".into()))?;
+    let mut functions = Vec::with_capacity(fns_json.len());
+    for (i, f) in fns_json.iter().enumerate() {
+        let fname = f
+            .req_str("name")
+            .map_err(|e| DagSpecError::Json(format!("function[{i}]: {e}")))?;
+        let exec = f
+            .req_u64("exec_time_us")
+            .map_err(|e| DagSpecError::Json(format!("function[{i}]: {e}")))?;
+        let setup = f
+            .req_u64("setup_time_us")
+            .map_err(|e| DagSpecError::Json(format!("function[{i}]: {e}")))?;
+        let mem = f
+            .req_u64("mem_mb")
+            .map_err(|e| DagSpecError::Json(format!("function[{i}]: {e}")))?;
+        let artifact = f
+            .get("artifact")
+            .and_then(|a| a.as_str())
+            .unwrap_or("")
+            .to_string();
+        let mut spec = FunctionSpec::new(fname, exec, setup, mem);
+        spec.artifact = artifact;
+        functions.push(spec);
+    }
+    let mut edges = Vec::new();
+    if let Some(arr) = v.get("edges").and_then(|e| e.as_arr()) {
+        for (i, e) in arr.iter().enumerate() {
+            let pair = e
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| {
+                    DagSpecError::Json(format!("edges[{i}] must be a [parent, child] pair"))
+                })?;
+            let p = pair[0]
+                .as_u64()
+                .ok_or_else(|| DagSpecError::Json(format!("edges[{i}][0] must be an index")))?;
+            let c = pair[1]
+                .as_u64()
+                .ok_or_else(|| DagSpecError::Json(format!("edges[{i}][1] must be an index")))?;
+            let conv = |x: u64, what: &str| {
+                u16::try_from(x)
+                    .map_err(|_| DagSpecError::Json(format!("edges[{i}] {what} out of range")))
+            };
+            edges.push((conv(p, "parent")?, conv(c, "child")?));
+        }
+    }
+    Ok(DagSpec::new(id, name, functions, edges, deadline)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "name": "thumbnailer",
+      "deadline_us": 150000,
+      "functions": [
+        {"name": "resize", "exec_time_us": 50000, "setup_time_us": 200000,
+         "mem_mb": 128, "artifact": "mlp_infer_b1"},
+        {"name": "notify", "exec_time_us": 10000, "setup_time_us": 125000,
+         "mem_mb": 128}
+      ],
+      "edges": [[0, 1]]
+    }"#;
+
+    #[test]
+    fn parse_example_document() {
+        let d = parse_dag_json(DagId(3), DOC).unwrap();
+        assert_eq!(d.name, "thumbnailer");
+        assert_eq!(d.deadline, 150_000);
+        assert_eq!(d.functions[0].artifact, "mlp_infer_b1");
+        assert_eq!(d.functions[1].artifact, "");
+        assert_eq!(d.edges, vec![(0, 1)]);
+        assert_eq!(d.total_cpl, 60_000);
+        assert_eq!(d.id, DagId(3));
+    }
+
+    #[test]
+    fn missing_fields_are_errors() {
+        assert!(parse_dag_json(DagId(0), r#"{"name": "x"}"#).is_err());
+        assert!(parse_dag_json(
+            DagId(0),
+            r#"{"name":"x","deadline_us":1,"functions":[{"name":"f"}]}"#
+        )
+        .is_err());
+        assert!(parse_dag_json(DagId(0), "not json").is_err());
+    }
+
+    #[test]
+    fn edges_optional() {
+        let d = parse_dag_json(
+            DagId(0),
+            r#"{"name":"x","deadline_us":1000,
+               "functions":[{"name":"f","exec_time_us":10,"setup_time_us":5,"mem_mb":128}]}"#,
+        )
+        .unwrap();
+        assert!(d.edges.is_empty());
+    }
+
+    #[test]
+    fn bad_edge_shapes_rejected() {
+        let base = r#"{"name":"x","deadline_us":1000,
+            "functions":[{"name":"a","exec_time_us":1,"setup_time_us":1,"mem_mb":1},
+                         {"name":"b","exec_time_us":1,"setup_time_us":1,"mem_mb":1}],
+            "edges": EDGES}"#;
+        for bad in ["[[0]]", "[[0,1,2]]", "[\"x\"]", "[[0,\"b\"]]"] {
+            let doc = base.replace("EDGES", bad);
+            assert!(parse_dag_json(DagId(0), &doc).is_err(), "{bad}");
+        }
+        // cycle rejected through structural validation
+        let doc = base.replace("EDGES", "[[0,1],[1,0]]");
+        assert!(matches!(
+            parse_dag_json(DagId(0), &doc).unwrap_err(),
+            DagSpecError::Structure(DagError::Cyclic(_))
+        ));
+    }
+}

@@ -1,0 +1,227 @@
+//! §7.2 macrobenchmarks: Fig 7 (Archipelago vs baseline, Workloads 1–2)
+//! and Fig 8 (sources of improvement for Workload 2).
+//!
+//! Configuration mirrors §7.1: the 8 SGS × 8 worker × 20-core testbed,
+//! C1–C4 DAG classes (two per class), sandbox setups 125–400 ms,
+//! SOT = 0.3. Rates are scaled so peak offered load reaches ~100% of
+//! cluster CPU (the paper kept its cluster between ~70% and ~110%).
+//! The baseline gets the same hardware with an 8 GB/worker container
+//! pool (OpenWhisk invoker-style userMemory) and a 100 µs serialized
+//! decision cost; see EXPERIMENTS.md for the paper-vs-measured notes.
+
+use crate::baseline::{BaselineKind, BaselineOptions, BaselineSim};
+use crate::config::{Config, SEC};
+use crate::metrics::{fmt_us, Csv, SummaryRow};
+use crate::platform::{SimOptions, SimPlatform};
+use crate::workload::{macro_mix, peak_offered_cores, App, DagClass, WorkloadKind};
+
+use super::{horizon, write_cdf, ExpContext, ExpResult};
+
+pub(crate) const BASELINE_POOL_MB: u64 = 8 * 1024;
+pub(crate) const BASELINE_DECISION_US: u64 = 100;
+
+/// Build the §7.2 workload: 2 DAGs/class, peak-scaled to the cluster.
+pub(crate) fn paper_mix(kind: WorkloadKind, cfg: &Config, seed: u64) -> Vec<App> {
+    let total = cfg.total_cores() as f64;
+    let probe = macro_mix(kind, 2, 1.0, seed);
+    let peak: f64 = probe.iter().map(peak_offered_cores).sum();
+    macro_mix(kind, 2, total / peak, seed)
+}
+
+pub(crate) struct MacroRun {
+    pub arch: SummaryRow,
+    pub base: SummaryRow,
+    pub arch_platform: SimPlatform,
+    pub base_sim: BaselineSim,
+}
+
+pub(crate) fn run_macro(ctx: &ExpContext, kind: WorkloadKind, record_series: bool) -> MacroRun {
+    let cfg = Config::default();
+    let apps = paper_mix(kind, &cfg, ctx.seed);
+    let hz = horizon(ctx, 120);
+    let warmup = hz / 4;
+    let opts = SimOptions {
+        seed: ctx.seed,
+        horizon: hz,
+        warmup,
+        record_series,
+        ..SimOptions::default()
+    };
+    let mut arch_platform = SimPlatform::new(cfg.clone(), apps.clone(), opts);
+    let arch = arch_platform.run();
+    let bopts = BaselineOptions {
+        kind: BaselineKind::CentralizedFifo,
+        seed: ctx.seed,
+        horizon: hz,
+        warmup,
+        decision_cost: BASELINE_DECISION_US,
+        ..BaselineOptions::default()
+    };
+    let mut base_sim = BaselineSim::new(
+        cfg.cluster.num_sgs * cfg.cluster.workers_per_sgs,
+        cfg.cluster.cores_per_worker,
+        BASELINE_POOL_MB,
+        apps,
+        bopts,
+    );
+    let base = base_sim.run();
+    MacroRun {
+        arch,
+        base,
+        arch_platform,
+        base_sim,
+    }
+}
+
+fn class_rows(platform: &SimPlatform) -> String {
+    let mut lines = Vec::new();
+    for (ci, class) in DagClass::ALL.iter().enumerate() {
+        let (mut met, mut n, mut cold) = (0u64, 0u64, 0u64);
+        for id in [2 * ci as u32, 2 * ci as u32 + 1] {
+            if let Some(g) = platform.metrics.per_dag.get(&id) {
+                met += g.deadlines_met;
+                n += g.completed;
+                cold += g.cold_starts;
+            }
+        }
+        lines.push(format!(
+            "  {}: met={:6.2}% n={n} cold={cold}",
+            class.name(),
+            100.0 * met as f64 / n.max(1) as f64
+        ));
+    }
+    lines.join("\n")
+}
+
+/// Fig 7: E2E latency CDFs + % deadlines met, both workloads.
+pub fn fig7(ctx: &ExpContext) -> ExpResult {
+    let mut files = Vec::new();
+    let mut blocks = Vec::new();
+    for (kind, label, paper_tail, paper_missed) in [
+        (WorkloadKind::W1, "w1", "20.83x", "0.76% vs 33%"),
+        (WorkloadKind::W2, "w2", "35.97x", "0.98% vs 9.66%"),
+    ] {
+        let run = run_macro(ctx, kind, false);
+        let pa = ctx.path(&format!("fig7_{label}_archipelago_cdf.csv"));
+        let pb = ctx.path(&format!("fig7_{label}_baseline_cdf.csv"));
+        write_cdf(&pa, &run.arch_platform.metrics.total.e2e).unwrap();
+        write_cdf(&pb, &run.base_sim.metrics.total.e2e).unwrap();
+        let mut met_csv = Csv::new(&["system", "class", "deadline_met_rate"]);
+        for (ci, class) in DagClass::ALL.iter().enumerate() {
+            for (sys, m) in [
+                ("archipelago", &run.arch_platform.metrics),
+                ("baseline", &run.base_sim.metrics),
+            ] {
+                let (mut met, mut n) = (0u64, 0u64);
+                for id in [2 * ci as u32, 2 * ci as u32 + 1] {
+                    if let Some(g) = m.per_dag.get(&id) {
+                        met += g.deadlines_met;
+                        n += g.completed;
+                    }
+                }
+                met_csv.row(&[
+                    sys.into(),
+                    class.name().into(),
+                    format!("{:.4}", met as f64 / n.max(1) as f64),
+                ]);
+            }
+        }
+        let pm = ctx.path(&format!("fig7_{label}_deadlines_met.csv"));
+        met_csv.write(&pm).unwrap();
+        let tail_ratio = run.base.p999 as f64 / run.arch.p999.max(1) as f64;
+        blocks.push(format!(
+            "{}:\n{}\n{}\n  tail p99.9 ratio base/arch = {tail_ratio:.1}x (paper {paper_tail})\n\
+             \x20 missed: arch {:.2}% vs base {:.2}% (paper {paper_missed})\n\
+             \x20 per-class (archipelago):\n{}",
+            label.to_uppercase(),
+            run.arch.format_line("  archipelago"),
+            run.base.format_line("  baseline"),
+            100.0 * (1.0 - run.arch.deadline_met_rate),
+            100.0 * (1.0 - run.base.deadline_met_rate),
+            class_rows(&run.arch_platform),
+        ));
+        files.extend([pa, pb, pm]);
+    }
+    ExpResult {
+        id: "fig7",
+        title: "macrobenchmark: Archipelago vs baseline (W1 + W2)",
+        summary: blocks.join("\n"),
+        files,
+    }
+}
+
+/// Fig 8: sources of improvement on Workload 2 — queuing-delay CDFs and
+/// proactive-vs-ideal sandbox allocation for a C2 DAG.
+pub fn fig8(ctx: &ExpContext) -> ExpResult {
+    let run = run_macro(ctx, WorkloadKind::W2, true);
+    // (a) queuing delay
+    let pa = ctx.path("fig8a_arch_qdelay_cdf.csv");
+    let pb = ctx.path("fig8a_base_qdelay_cdf.csv");
+    write_cdf(&pa, &run.arch_platform.metrics.total.qdelay).unwrap();
+    write_cdf(&pb, &run.base_sim.metrics.total.qdelay).unwrap();
+    let q_ratio =
+        run.base.qdelay_p999 as f64 / run.arch.qdelay_p999.max(1) as f64;
+    let cold_ratio = run.base.cold_starts as f64 / run.arch.cold_starts.max(1) as f64;
+
+    // (b) proactive allocation vs ideal for the first C2 DAG (id 2):
+    // sum per-SGS series.
+    let mut alloc: std::collections::BTreeMap<u64, f64> = Default::default();
+    let mut busy: std::collections::BTreeMap<u64, f64> = Default::default();
+    for (name, series) in &run.arch_platform.series {
+        let target = if name.starts_with("sandboxes.dag2.") {
+            Some(&mut alloc)
+        } else if name.starts_with("busy.dag2.") {
+            Some(&mut busy)
+        } else {
+            None
+        };
+        if let Some(map) = target {
+            for (t, v) in series {
+                *map.entry(*t / (SEC / 2)).or_insert(0.0) += v;
+            }
+        }
+    }
+    let mut csv = Csv::new(&["time_s", "allocated", "ideal_busy"]);
+    #[allow(unused_mut)]
+    let mut overprov: Vec<f64> = Vec::new();
+    for (t, a) in &alloc {
+        let b = busy.get(t).copied().unwrap_or(0.0);
+        // series sampled 5x per half-second bucket per SGS: normalize
+        let a = a / 5.0;
+        let b = b / 5.0;
+        csv.row(&[format!("{:.1}", *t as f64 / 2.0), format!("{a:.1}"), format!("{b:.1}")]);
+        // over-allocation is meaningful only when the DAG is actually
+        // busy (the troughs of the sinusoid divide by ~zero)
+        if b > 10.0 {
+            overprov.push((a - b) / b);
+        }
+    }
+    let pc = ctx.path("fig8b_proactive_vs_ideal.csv");
+    csv.write(&pc).unwrap();
+    overprov.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med_over = overprov.get(overprov.len() / 2).copied().unwrap_or(0.0);
+    let p90_over = overprov
+        .get((overprov.len() as f64 * 0.9) as usize)
+        .copied()
+        .unwrap_or(0.0);
+
+    let summary = format!(
+        "qdelay p99.9: arch {} vs base {} — {q_ratio:.1}x lower (paper 47.5x)\n\
+         cold starts: arch {} vs base {} — {cold_ratio:.1}x fewer (paper 24.38x)\n\
+         C2 allocation tracks demand: median over-allocation {:.0}%, p90 {:.0}%\n\
+         (paper: worst case 37.4% over ideal; ours provisions for the 99th\n\
+         percentile of arrivals plus margin, so bursts are covered)",
+        fmt_us(run.arch.qdelay_p999),
+        fmt_us(run.base.qdelay_p999),
+        run.arch.cold_starts,
+        run.base.cold_starts,
+        100.0 * med_over,
+        100.0 * p90_over,
+    );
+    ExpResult {
+        id: "fig8",
+        title: "W2 sources of improvement: queuing delay + proactive allocation",
+        summary,
+        files: vec![pa, pb, pc],
+    }
+}

@@ -1,0 +1,140 @@
+//! Experiment harnesses: one per table/figure of the paper's evaluation
+//! (§2.2 characterization, §7 evaluation). Each harness regenerates its
+//! figure's data as CSV under the output directory and returns a summary
+//! with the headline comparison the paper reports. `archipelago figures
+//! --all` runs everything; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod characterization;
+pub mod macrobench;
+pub mod placement;
+pub mod scaling;
+pub mod sensitivity;
+
+use std::path::PathBuf;
+
+/// Shared harness context.
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    pub out_dir: PathBuf,
+    /// Reduced horizons for bench/CI runs.
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl ExpContext {
+    pub fn new(out_dir: &str) -> Self {
+        ExpContext {
+            out_dir: PathBuf::from(out_dir),
+            quick: false,
+            seed: 42,
+        }
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.out_dir.join(file)
+    }
+}
+
+/// One experiment's outcome: a human-readable summary block plus the
+/// list of CSVs written.
+#[derive(Debug)]
+pub struct ExpResult {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub summary: String,
+    pub files: Vec<PathBuf>,
+}
+
+impl ExpResult {
+    pub fn render(&self) -> String {
+        let mut s = format!("== {} — {} ==\n{}\n", self.id, self.title, self.summary);
+        for f in &self.files {
+            s.push_str(&format!("  wrote {}\n", f.display()));
+        }
+        s
+    }
+}
+
+type ExpFn = fn(&ExpContext) -> ExpResult;
+
+/// The experiment registry, in paper order.
+pub fn registry() -> Vec<(&'static str, ExpFn)> {
+    vec![
+        ("fig1", characterization::fig1 as ExpFn),
+        ("fig2abc", characterization::fig2abc as ExpFn),
+        ("fig2d", characterization::fig2d as ExpFn),
+        ("table1", characterization::table1 as ExpFn),
+        ("fig7", macrobench::fig7 as ExpFn),
+        ("fig8", macrobench::fig8 as ExpFn),
+        ("fig9", placement::fig9 as ExpFn),
+        ("lru", placement::lru_vs_fair as ExpFn),
+        ("fig10", scaling::fig10 as ExpFn),
+        ("fig11", scaling::fig11 as ExpFn),
+        ("gradual", scaling::gradual_vs_instant as ExpFn),
+        ("fig12", sensitivity::fig12 as ExpFn),
+        ("fig13", sensitivity::fig13 as ExpFn),
+    ]
+}
+
+/// Run one experiment by id.
+pub fn run_one(id: &str, ctx: &ExpContext) -> Option<ExpResult> {
+    registry()
+        .into_iter()
+        .find(|(name, _)| *name == id)
+        .map(|(_, f)| f(ctx))
+}
+
+/// Run everything, returning results in paper order.
+pub fn run_all(ctx: &ExpContext) -> Vec<ExpResult> {
+    registry().into_iter().map(|(_, f)| f(ctx)).collect()
+}
+
+// ---------------------------------------------------------------------
+// Shared helpers
+// ---------------------------------------------------------------------
+
+use crate::config::{Micros, SEC};
+use crate::metrics::Csv;
+use crate::util::stats::LogHistogram;
+
+/// Write a latency CDF (percentile, value_us) for plotting.
+pub(crate) fn write_cdf(path: &PathBuf, hist: &LogHistogram) -> std::io::Result<()> {
+    let mut csv = Csv::new(&["percentile", "latency_us"]);
+    for q in [
+        0.01, 0.05, 0.10, 0.25, 0.50, 0.75, 0.90, 0.95, 0.99, 0.995, 0.999, 0.9999,
+    ] {
+        csv.row(&[format!("{q}"), hist.quantile(q).to_string()]);
+    }
+    csv.row(&["1.0".into(), hist.max().to_string()]);
+    csv.write(path)
+}
+
+pub(crate) fn horizon(ctx: &ExpContext, full_secs: u64) -> Micros {
+    if ctx.quick {
+        (full_secs / 4).max(8) * SEC
+    } else {
+        full_secs * SEC
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_artifact() {
+        let ids: Vec<&str> = registry().iter().map(|(id, _)| *id).collect();
+        for required in [
+            "fig1", "fig2abc", "fig2d", "table1", "fig7", "fig8", "fig9", "lru",
+            "fig10", "fig11", "gradual", "fig12", "fig13",
+        ] {
+            assert!(ids.contains(&required), "missing {required}");
+        }
+    }
+
+    #[test]
+    fn run_one_unknown_is_none() {
+        let ctx = ExpContext::new("/tmp/archipelago_exp_test");
+        assert!(run_one("nope", &ctx).is_none());
+    }
+}

@@ -1,0 +1,156 @@
+//! Sandbox-aware lottery routing (§5.2.3).
+//!
+//! Among the SGSs associated with a DAG, each request is routed by a
+//! lottery draw where an SGS's tickets equal the number of proactive
+//! sandboxes it holds for the DAG — so request share tracks capacity as
+//! the new SGS warms up (gradual scale-out). A freshly added SGS starts
+//! at 1 ticket ("we initialize the tickets for the new SGS with a small
+//! value (say 1) so that requests go to it"). SGSs on the *removed* list
+//! still receive tickets, scaled by a discount factor, so scale-in is
+//! gradual too.
+
+use crate::sgs::SgsId;
+use crate::util::rng::Rng;
+
+/// One SGS's entry in a DAG's lottery.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TicketEntry {
+    pub sgs: SgsId,
+    pub tickets: f64,
+}
+
+/// Congestion damping: an SGS reporting queuing delay `q` (µs) has its
+/// tickets scaled by `1 / (1 + q/10ms)`. Without this, sandbox-count
+/// tickets form a positive feedback loop (more traffic → higher local
+/// demand estimate → more sandboxes → more tickets) with no restoring
+/// force, and one SGS saturates while its peers idle — violating the
+/// LBS's §5.1 responsibility to "ensure that ... a single SGS does not
+/// become a bottleneck". The damping uses only the queuing delay the
+/// SGSs already piggyback (§5.2.1).
+const QDELAY_DAMP_US: f64 = 10_000.0;
+
+fn damp(qdelay_us: f64) -> f64 {
+    1.0 / (1.0 + (qdelay_us.max(0.0) / QDELAY_DAMP_US))
+}
+
+/// Build the ticket table for a DAG: active SGSs get
+/// `max(1, sandbox_count)` tickets damped by reported queuing delay;
+/// removed SGSs get their damped count scaled by `discount`.
+pub fn ticket_table(
+    active: &[(SgsId, u32, f64)],
+    removed: &[(SgsId, u32, f64)],
+    discount: f64,
+) -> Vec<TicketEntry> {
+    let mut out = Vec::with_capacity(active.len() + removed.len());
+    for &(sgs, sandboxes, qdelay_us) in active {
+        out.push(TicketEntry {
+            sgs,
+            tickets: f64::from(sandboxes.max(1)) * damp(qdelay_us),
+        });
+    }
+    for &(sgs, sandboxes, qdelay_us) in removed {
+        let t = f64::from(sandboxes) * damp(qdelay_us) * discount;
+        if t > 0.0 {
+            out.push(TicketEntry { sgs, tickets: t });
+        }
+    }
+    out
+}
+
+/// Draw the routing lottery. Panics on an empty table (a DAG always has
+/// at least one active SGS).
+pub fn draw(table: &[TicketEntry], rng: &mut Rng) -> SgsId {
+    assert!(!table.is_empty(), "lottery over zero SGSs");
+    if table.len() == 1 {
+        return table[0].sgs;
+    }
+    let weights: Vec<f64> = table.iter().map(|t| t.tickets).collect();
+    table[rng.weighted_choice(&weights)].sgs
+}
+
+/// Instant-mode routing (ablation §7.3.2): uniform over active SGSs,
+/// ignoring sandbox counts.
+pub fn draw_uniform(active: &[SgsId], rng: &mut Rng) -> SgsId {
+    assert!(!active.is_empty());
+    *rng.choose(active)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn active_min_one_ticket() {
+        let t = ticket_table(&[(SgsId(0), 0, 0.0), (SgsId(1), 10, 0.0)], &[], 0.25);
+        assert_eq!(t[0].tickets, 1.0);
+        assert_eq!(t[1].tickets, 10.0);
+    }
+
+    #[test]
+    fn removed_discounted_and_zero_dropped() {
+        let t = ticket_table(
+            &[(SgsId(0), 4, 0.0)],
+            &[(SgsId(1), 8, 0.0), (SgsId(2), 0, 0.0)],
+            0.25,
+        );
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[1].sgs, SgsId(1));
+        assert_eq!(t[1].tickets, 2.0);
+    }
+
+    #[test]
+    fn congested_sgs_loses_ticket_share() {
+        // equal sandboxes, one SGS reporting 90ms queueing → ~10x fewer
+        // tickets; this is the anti-hotspot restoring force (§5.1).
+        let t = ticket_table(
+            &[(SgsId(0), 10, 0.0), (SgsId(1), 10, 90_000.0)],
+            &[],
+            0.25,
+        );
+        assert!(t[0].tickets / t[1].tickets > 8.0, "{t:?}");
+    }
+
+    #[test]
+    fn draw_share_tracks_tickets() {
+        let t = ticket_table(&[(SgsId(0), 9, 0.0), (SgsId(1), 1, 0.0)], &[], 0.25);
+        let mut rng = Rng::new(42);
+        let mut counts = [0u32; 2];
+        for _ in 0..20_000 {
+            counts[draw(&t, &mut rng).0 as usize] += 1;
+        }
+        let share = counts[0] as f64 / 20_000.0;
+        assert!((share - 0.9).abs() < 0.02, "share {share}");
+    }
+
+    #[test]
+    fn new_sgs_receives_some_traffic_immediately() {
+        // freshly added SGS with 0 sandboxes still gets ~1/(N+1) of a
+        // well-provisioned DAG's traffic via its floor ticket
+        let t = ticket_table(&[(SgsId(0), 99, 0.0), (SgsId(1), 0, 0.0)], &[], 0.25);
+        let mut rng = Rng::new(7);
+        let hits = (0..50_000)
+            .filter(|_| draw(&t, &mut rng) == SgsId(1))
+            .count();
+        assert!(hits > 200, "new SGS starved: {hits}");
+    }
+
+    #[test]
+    fn uniform_mode_ignores_sandboxes() {
+        let active = [SgsId(0), SgsId(1), SgsId(2)];
+        let mut rng = Rng::new(3);
+        let mut counts = [0u32; 3];
+        for _ in 0..30_000 {
+            counts[draw_uniform(&active, &mut rng).0 as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn single_entry_fast_path() {
+        let t = ticket_table(&[(SgsId(5), 0, 0.0)], &[], 0.5);
+        let mut rng = Rng::new(1);
+        assert_eq!(draw(&t, &mut rng), SgsId(5));
+    }
+}

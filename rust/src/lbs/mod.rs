@@ -1,0 +1,518 @@
+//! The Load Balancing Service (§5): routes each incoming DAG request to
+//! one of the SGSs associated with that DAG, and scales the association
+//! set per DAG.
+//!
+//! Responsibilities (§5.1): (1) keep any single SGS from becoming a
+//! hotspot, (2) sandbox-aware routing so requests land where proactive
+//! sandboxes exist. Both are served by the same machinery: consistent
+//! hashing for initial placement ([`ring`]), lottery routing weighted by
+//! per-SGS sandbox counts ([`lottery`]), and the queuing-delay-driven
+//! scaling loop ([`scaling`], Pseudocode 2) with gradual ramp-up
+//! (ticket floor of 1) and gradual drain (removed list with discounted
+//! tickets).
+
+pub mod lottery;
+pub mod ring;
+pub mod scaling;
+
+use std::collections::{HashMap, HashSet};
+
+use crate::config::{LbsConfig, Micros, ScaleOutMode};
+use crate::dag::DagId;
+use crate::sgs::SgsId;
+use crate::util::rng::Rng;
+
+pub use ring::HashRing;
+pub use scaling::{ScaleDecision, SgsReport};
+
+/// Control-plane actions the LBS asks the platform to carry out.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScaleAction {
+    /// Associate `sgs` with `dag`; prime it with `prime_target`
+    /// proactive sandboxes per function (the mean across active SGSs)
+    /// and seed its rate estimate.
+    Out {
+        dag: DagId,
+        sgs: SgsId,
+        prime_target: u32,
+        expected_rate: f64,
+    },
+    /// Move `sgs` to the DAG's removed list (gradual drain).
+    In { dag: DagId, sgs: SgsId },
+    /// Fully dissociate a drained SGS (platform calls
+    /// `Sgs::release_dag`).
+    Drop { dag: DagId, sgs: SgsId },
+    /// Reset qdelay windows at every SGS associated with `dag` (after
+    /// any scaling action, §5.2.2).
+    ResetWindows { dag: DagId },
+}
+
+/// Per-DAG routing state.
+#[derive(Debug)]
+struct DagRouting {
+    /// Hash key used on the ring (stable per DAG).
+    key: u64,
+    /// Associated SGSs in acquisition order; last = most recently added.
+    active: Vec<SgsId>,
+    /// Scaled-in SGSs still draining, with control ticks spent there.
+    removed: Vec<(SgsId, u32)>,
+    /// Latest piggybacked report per SGS.
+    reports: HashMap<SgsId, SgsReport>,
+    /// Consecutive control evaluations below the scale-in threshold;
+    /// scale-in fires only after [`SCALE_IN_HYSTERESIS`] of them — the
+    /// paper's anti-oscillation intent ("we keep the scale-in threshold
+    /// well below the scale-out threshold") made robust for workloads
+    /// whose troughs reach near-zero queuing within one control tick.
+    in_streak: u32,
+}
+
+/// How many control ticks a removed SGS may linger before forced drop.
+const REMOVED_DROP_TICKS: u32 = 20;
+
+/// Consecutive below-SIT evaluations required before scaling in.
+const SCALE_IN_HYSTERESIS: u32 = 30;
+
+/// The load balancing service.
+#[derive(Debug)]
+pub struct Lbs {
+    cfg: LbsConfig,
+    ring: HashRing,
+    dags: HashMap<DagId, DagRouting>,
+    /// Fail-stopped SGSs (§6.1): excluded from placement and scale-out
+    /// until a replacement instance re-registers.
+    dead: HashSet<SgsId>,
+    rng: Rng,
+    routes: u64,
+    scale_outs: u64,
+    scale_ins: u64,
+}
+
+impl Lbs {
+    pub fn new(cfg: LbsConfig, sgs_count: usize, seed: u64) -> Self {
+        let ring = HashRing::new(sgs_count, cfg.ring_vnodes);
+        Lbs {
+            cfg,
+            ring,
+            dags: HashMap::new(),
+            dead: HashSet::new(),
+            rng: Rng::new(seed ^ 0x1b5),
+            routes: 0,
+            scale_outs: 0,
+            scale_ins: 0,
+        }
+    }
+
+    pub fn config(&self) -> &LbsConfig {
+        &self.cfg
+    }
+
+    pub fn routes(&self) -> u64 {
+        self.routes
+    }
+
+    pub fn scale_outs(&self) -> u64 {
+        self.scale_outs
+    }
+
+    pub fn scale_ins(&self) -> u64 {
+        self.scale_ins
+    }
+
+    /// First request for a DAG: assign its initial SGS via the ring
+    /// (skipping fail-stopped SGSs).
+    pub fn register_dag(&mut self, dag: DagId) -> SgsId {
+        let key = dag.0 as u64;
+        let dead = &self.dead;
+        let primary = self
+            .ring
+            .successors(key)
+            .find(|s| !dead.contains(s))
+            .expect("at least one live SGS");
+        self.dags.entry(dag).or_insert_with(|| DagRouting {
+            key,
+            active: vec![primary],
+            removed: Vec::new(),
+            reports: HashMap::new(),
+            in_streak: 0,
+        });
+        primary
+    }
+
+    /// SGSs currently associated with a DAG (active list).
+    pub fn active_sgs(&self, dag: DagId) -> &[SgsId] {
+        self.dags
+            .get(&dag)
+            .map(|d| d.active.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// SGSs on the removed (draining) list.
+    pub fn removed_sgs(&self, dag: DagId) -> Vec<SgsId> {
+        self.dags
+            .get(&dag)
+            .map(|d| d.removed.iter().map(|(s, _)| *s).collect())
+            .unwrap_or_default()
+    }
+
+    /// Route one request (§5.2.3). Requires the DAG to be registered.
+    pub fn route(&mut self, dag: DagId) -> SgsId {
+        self.routes += 1;
+        let d = self.dags.get(&dag).expect("route before register_dag");
+        let choice = match self.cfg.scale_out_mode {
+            ScaleOutMode::Gradual => {
+                let entry = |s: &SgsId| {
+                    let r = d.reports.get(s);
+                    (
+                        *s,
+                        r.map(|r| r.sandboxes).unwrap_or(0),
+                        r.map(|r| r.qdelay_us).unwrap_or(0.0),
+                    )
+                };
+                let active: Vec<(SgsId, u32, f64)> = d.active.iter().map(entry).collect();
+                let removed: Vec<(SgsId, u32, f64)> =
+                    d.removed.iter().map(|(s, _)| entry(s)).collect();
+                let table = lottery::ticket_table(&active, &removed, self.cfg.removed_discount);
+                lottery::draw(&table, &mut self.rng)
+            }
+            ScaleOutMode::Instant => lottery::draw_uniform(&d.active, &mut self.rng),
+        };
+        choice
+    }
+
+    /// Ingest a piggybacked per-SGS report for a DAG.
+    pub fn update_report(&mut self, dag: DagId, report: SgsReport) {
+        if let Some(d) = self.dags.get_mut(&dag) {
+            d.reports.insert(report.sgs, report);
+        }
+    }
+
+    /// Periodic control evaluation for one DAG (Pseudocode 2 +
+    /// removed-list maintenance). `slack` is the DAG's static slack.
+    pub fn control_tick(&mut self, dag: DagId, slack: Micros) -> Vec<ScaleAction> {
+        let sgs_total = self.ring.sgs_count();
+        let Some(d) = self.dags.get_mut(&dag) else {
+            return Vec::new();
+        };
+        let mut actions = Vec::new();
+
+        // Removed-list maintenance: drop SGSs that have drained (their
+        // sandbox count decayed to zero) or lingered too long.
+        d.removed = {
+            let reports = &d.reports;
+            let mut keep = Vec::new();
+            for (sgs, ticks) in d.removed.drain(..) {
+                let sandboxes = reports.get(&sgs).map(|r| r.sandboxes).unwrap_or(0);
+                if sandboxes == 0 || ticks + 1 >= REMOVED_DROP_TICKS {
+                    actions.push(ScaleAction::Drop { dag, sgs });
+                } else {
+                    keep.push((sgs, ticks + 1));
+                }
+            }
+            keep
+        };
+
+        // Gather reports for the active set; an SGS we have never heard
+        // from reports an unfilled window (gating the decision).
+        let reports: Vec<SgsReport> = d
+            .active
+            .iter()
+            .map(|s| {
+                d.reports.get(s).copied().unwrap_or(SgsReport {
+                    sgs: *s,
+                    sandboxes: 0,
+                    qdelay_us: 0.0,
+                    window_full: false,
+                })
+            })
+            .collect();
+        let (_metric, decision) = scaling::evaluate(
+            &reports,
+            slack,
+            self.cfg.scale_out_threshold,
+            self.cfg.scale_in_threshold,
+        );
+        match decision {
+            ScaleDecision::Out => {
+                d.in_streak = 0;
+                // Revive a draining SGS first — it still has sandboxes.
+                if let Some(pos) = d.removed.iter().position(|_| true) {
+                    let (sgs, _) = d.removed.remove(pos);
+                    d.active.push(sgs);
+                    self.scale_outs += 1;
+                    actions.push(ScaleAction::ResetWindows { dag });
+                } else if d.active.len() < sgs_total - self.dead.len() {
+                    // Next live SGS clockwise on the ring not already
+                    // active.
+                    let key = d.key;
+                    let dead = &self.dead;
+                    let next = self
+                        .ring
+                        .successors(key)
+                        .find(|s| !d.active.contains(s) && !dead.contains(s));
+                    if let Some(sgs) = next {
+                        let total_sandboxes: u32 = reports.iter().map(|r| r.sandboxes).sum();
+                        let n_after = (d.active.len() + 1) as u32;
+                        let prime_target = (total_sandboxes / n_after).max(1);
+                        d.active.push(sgs);
+                        self.scale_outs += 1;
+                        // Seed the new SGS's rate so inv_cdf(sla, rate)
+                        // lands near the prime target.
+                        let expected_rate = (f64::from(prime_target) * 0.75).max(0.5);
+                        actions.push(ScaleAction::Out {
+                            dag,
+                            sgs,
+                            prime_target,
+                            expected_rate,
+                        });
+                        actions.push(ScaleAction::ResetWindows { dag });
+                    }
+                }
+            }
+            ScaleDecision::In => {
+                d.in_streak += 1;
+                if d.in_streak >= SCALE_IN_HYSTERESIS && d.active.len() > 1 {
+                    d.in_streak = 0;
+                    let sgs = d.active.pop().expect("len > 1");
+                    d.removed.push((sgs, 0));
+                    self.scale_ins += 1;
+                    actions.push(ScaleAction::In { dag, sgs });
+                    actions.push(ScaleAction::ResetWindows { dag });
+                }
+            }
+            ScaleDecision::Hold => {
+                d.in_streak = 0;
+            }
+        }
+        actions
+    }
+
+    /// Fail-stop an SGS (§6.1): remove it from every DAG's active and
+    /// removed lists, substituting the next live ring successor when a
+    /// DAG would otherwise have no active SGS. Returns the DAGs whose
+    /// active set changed.
+    pub fn remove_sgs(&mut self, failed: SgsId) -> Vec<DagId> {
+        self.dead.insert(failed);
+        let ring = &self.ring;
+        let dead = &self.dead;
+        let mut affected = Vec::new();
+        for (dag, d) in self.dags.iter_mut() {
+            let before = d.active.len();
+            d.active.retain(|s| *s != failed);
+            d.removed.retain(|(s, _)| *s != failed);
+            d.reports.remove(&failed);
+            if d.active.is_empty() {
+                let replacement = ring
+                    .successors(d.key)
+                    .find(|s| !dead.contains(s))
+                    .expect("cluster has at least one live SGS");
+                d.active.push(replacement);
+            }
+            if d.active.len() != before {
+                affected.push(*dag);
+            }
+        }
+        affected.sort();
+        affected
+    }
+
+    /// A replacement SGS instance came online for a failed slot (§6.1:
+    /// state recovered from the external store).
+    pub fn restore_sgs(&mut self, sgs: SgsId) {
+        self.dead.remove(&sgs);
+    }
+
+    /// Current scaling metric for observability (Fig 10/11 plots).
+    pub fn current_metric(&self, dag: DagId, slack: Micros) -> f64 {
+        let Some(d) = self.dags.get(&dag) else {
+            return 0.0;
+        };
+        let reports: Vec<SgsReport> = d
+            .active
+            .iter()
+            .filter_map(|s| d.reports.get(s).copied())
+            .collect();
+        scaling::scaling_metric(&reports, slack)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MS;
+
+    fn lbs(sgs: usize) -> Lbs {
+        Lbs::new(LbsConfig::default(), sgs, 7)
+    }
+
+    fn full_report(sgs: SgsId, sandboxes: u32, qdelay_us: f64) -> SgsReport {
+        SgsReport {
+            sgs,
+            sandboxes,
+            qdelay_us,
+            window_full: true,
+        }
+    }
+
+    #[test]
+    fn register_assigns_ring_primary_stably() {
+        let mut l = lbs(8);
+        let a = l.register_dag(DagId(1));
+        let b = l.register_dag(DagId(1));
+        assert_eq!(a, b);
+        assert_eq!(l.active_sgs(DagId(1)), &[a]);
+    }
+
+    #[test]
+    fn route_single_sgs() {
+        let mut l = lbs(4);
+        let s = l.register_dag(DagId(0));
+        for _ in 0..10 {
+            assert_eq!(l.route(DagId(0)), s);
+        }
+        assert_eq!(l.routes(), 10);
+    }
+
+    #[test]
+    fn scale_out_adds_next_ring_sgs_and_primes() {
+        let mut l = lbs(8);
+        let s0 = l.register_dag(DagId(0));
+        l.update_report(DagId(0), full_report(s0, 10, 100_000.0));
+        // metric = 100ms / 100ms slack = 1.0 > 0.3 → Out
+        let actions = l.control_tick(DagId(0), 100 * MS);
+        let out = actions
+            .iter()
+            .find_map(|a| match a {
+                ScaleAction::Out {
+                    sgs, prime_target, ..
+                } => Some((*sgs, *prime_target)),
+                _ => None,
+            })
+            .expect("scale out");
+        assert_ne!(out.0, s0);
+        assert_eq!(out.1, 5, "mean of 10 sandboxes over 2 SGSs");
+        assert_eq!(l.active_sgs(DagId(0)).len(), 2);
+        assert!(actions.contains(&ScaleAction::ResetWindows { dag: DagId(0) }));
+        assert_eq!(l.scale_outs(), 1);
+    }
+
+    #[test]
+    fn window_reset_gates_consecutive_scale_outs() {
+        let mut l = lbs(8);
+        let s0 = l.register_dag(DagId(0));
+        l.update_report(DagId(0), full_report(s0, 10, 100_000.0));
+        assert!(!l.control_tick(DagId(0), 100 * MS).is_empty());
+        // the new SGS has no report → window not full → Hold
+        let actions = l.control_tick(DagId(0), 100 * MS);
+        assert!(
+            actions.iter().all(|a| matches!(a, ScaleAction::Drop { .. })),
+            "gated until new SGS reports: {actions:?}"
+        );
+    }
+
+    #[test]
+    fn scale_in_moves_to_removed_then_drops() {
+        let mut l = lbs(8);
+        let s0 = l.register_dag(DagId(0));
+        l.update_report(DagId(0), full_report(s0, 10, 200_000.0));
+        l.control_tick(DagId(0), 100 * MS); // out
+        let s1 = *l.active_sgs(DagId(0)).last().unwrap();
+        // both idle now; scale-in needs a sustained streak (hysteresis)
+        l.update_report(DagId(0), full_report(s0, 10, 100.0));
+        l.update_report(DagId(0), full_report(s1, 10, 100.0));
+        let mut actions = Vec::new();
+        for _ in 0..SCALE_IN_HYSTERESIS + 1 {
+            actions = l.control_tick(DagId(0), 100 * MS);
+            if !actions.is_empty() {
+                break;
+            }
+        }
+        assert!(actions.contains(&ScaleAction::In { dag: DagId(0), sgs: s1 }));
+        assert_eq!(l.active_sgs(DagId(0)).len(), 1);
+        assert_eq!(l.removed_sgs(DagId(0)), vec![s1]);
+        // drained: report zero sandboxes → dropped on next tick
+        l.update_report(DagId(0), full_report(s1, 0, 100.0));
+        let actions = l.control_tick(DagId(0), 100 * MS);
+        assert!(actions.contains(&ScaleAction::Drop { dag: DagId(0), sgs: s1 }));
+        assert!(l.removed_sgs(DagId(0)).is_empty());
+    }
+
+    #[test]
+    fn removed_sgs_still_draws_discounted_traffic() {
+        let mut cfg = LbsConfig::default();
+        cfg.removed_discount = 0.5;
+        let mut l = Lbs::new(cfg, 8, 7);
+        let s0 = l.register_dag(DagId(0));
+        l.update_report(DagId(0), full_report(s0, 8, 200_000.0));
+        l.control_tick(DagId(0), 100 * MS); // out → s1
+        let s1 = *l.active_sgs(DagId(0)).last().unwrap();
+        l.update_report(DagId(0), full_report(s0, 8, 10.0));
+        l.update_report(DagId(0), full_report(s1, 8, 10.0));
+        for _ in 0..SCALE_IN_HYSTERESIS + 1 {
+            l.control_tick(DagId(0), 100 * MS); // in (after hysteresis)
+        }
+        assert_eq!(l.removed_sgs(DagId(0)), vec![s1]);
+        // s1 keeps 8 × 0.5 = 4 tickets vs s0's 8 → about a third
+        let hits = (0..10_000).filter(|_| l.route(DagId(0)) == s1).count();
+        assert!(hits > 2_000 && hits < 4_500, "gradual drain share: {hits}");
+    }
+
+    #[test]
+    fn scale_out_revives_draining_sgs_first() {
+        let mut l = lbs(8);
+        let s0 = l.register_dag(DagId(0));
+        l.update_report(DagId(0), full_report(s0, 8, 200_000.0));
+        l.control_tick(DagId(0), 100 * MS);
+        let s1 = *l.active_sgs(DagId(0)).last().unwrap();
+        l.update_report(DagId(0), full_report(s0, 8, 10.0));
+        l.update_report(DagId(0), full_report(s1, 8, 10.0));
+        for _ in 0..SCALE_IN_HYSTERESIS + 1 {
+            l.control_tick(DagId(0), 100 * MS); // in (after hysteresis)
+        }
+        assert_eq!(l.removed_sgs(DagId(0)), vec![s1]);
+        // load returns before the drain finishes
+        l.update_report(DagId(0), full_report(s0, 8, 300_000.0));
+        let actions = l.control_tick(DagId(0), 100 * MS);
+        // revival: no Out action (no priming needed), s1 back in active
+        assert!(actions.iter().all(|a| !matches!(a, ScaleAction::Out { .. })));
+        assert!(l.active_sgs(DagId(0)).contains(&s1));
+        assert!(l.removed_sgs(DagId(0)).is_empty());
+    }
+
+    #[test]
+    fn cannot_scale_beyond_cluster() {
+        let mut l = lbs(2);
+        let s0 = l.register_dag(DagId(0));
+        l.update_report(DagId(0), full_report(s0, 4, 500_000.0));
+        l.control_tick(DagId(0), 100 * MS);
+        let s1 = *l.active_sgs(DagId(0)).last().unwrap();
+        l.update_report(DagId(0), full_report(s0, 4, 500_000.0));
+        l.update_report(DagId(0), full_report(s1, 4, 500_000.0));
+        let actions = l.control_tick(DagId(0), 100 * MS);
+        assert!(actions.is_empty(), "no third SGS exists: {actions:?}");
+        assert_eq!(l.active_sgs(DagId(0)).len(), 2);
+    }
+
+    #[test]
+    fn never_scales_in_below_one() {
+        let mut l = lbs(4);
+        let s0 = l.register_dag(DagId(0));
+        l.update_report(DagId(0), full_report(s0, 4, 0.0));
+        let actions = l.control_tick(DagId(0), 100 * MS);
+        assert!(actions.is_empty());
+        assert_eq!(l.active_sgs(DagId(0)).len(), 1);
+    }
+
+    #[test]
+    fn instant_mode_routes_uniformly() {
+        let mut cfg = LbsConfig::default();
+        cfg.scale_out_mode = ScaleOutMode::Instant;
+        let mut l = Lbs::new(cfg, 8, 3);
+        let s0 = l.register_dag(DagId(0));
+        l.update_report(DagId(0), full_report(s0, 100, 200_000.0));
+        l.control_tick(DagId(0), 100 * MS); // out
+        let s1 = *l.active_sgs(DagId(0)).last().unwrap();
+        // uniform: new SGS gets ~half instantly despite 0 sandboxes
+        let hits = (0..10_000).filter(|_| l.route(DagId(0)) == s1).count();
+        assert!(hits > 4_500 && hits < 5_500, "instant share {hits}");
+    }
+}

@@ -1,0 +1,135 @@
+//! Consistent-hash ring over SGSs (§5.2.2 "Initial SGS Selection").
+//!
+//! Each SGS is hashed onto the ring at `vnodes` positions (virtual nodes
+//! smooth the key distribution); a DAG's initial SGS is the first ring
+//! position clockwise of the DAG-id hash. Scale-out walks further
+//! clockwise ("the next one in the ring"), so each DAG has a
+//! deterministic SGS acquisition order with distinct DAGs starting at
+//! spread-out points — no single SGS is responsible for a large share of
+//! DAGs.
+
+use crate::sgs::SgsId;
+
+fn mix64(mut x: u64) -> u64 {
+    // splitmix64 finalizer — good avalanche for ring positions
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// The ring: sorted (position, sgs) pairs.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    points: Vec<(u64, SgsId)>,
+}
+
+impl HashRing {
+    pub fn new(sgs_count: usize, vnodes: usize) -> Self {
+        assert!(sgs_count > 0 && vnodes > 0);
+        let mut points = Vec::with_capacity(sgs_count * vnodes);
+        for s in 0..sgs_count as u16 {
+            for v in 0..vnodes as u64 {
+                let pos = mix64((s as u64) << 32 | v);
+                points.push((pos, SgsId(s)));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points }
+    }
+
+    fn dag_hash(dag_key: u64) -> u64 {
+        mix64(dag_key ^ 0xD1A6_0000_0000_0000)
+    }
+
+    /// The initial SGS for a DAG.
+    pub fn primary(&self, dag_key: u64) -> SgsId {
+        self.successors(dag_key)
+            .next()
+            .expect("non-empty ring")
+    }
+
+    /// Clockwise walk from the DAG's ring position yielding each distinct
+    /// SGS once — the scale-out acquisition order.
+    pub fn successors(&self, dag_key: u64) -> impl Iterator<Item = SgsId> + '_ {
+        let h = Self::dag_hash(dag_key);
+        let start = self.points.partition_point(|(p, _)| *p < h);
+        let n = self.points.len();
+        let mut seen = Vec::new();
+        (0..n).filter_map(move |i| {
+            let (_, s) = self.points[(start + i) % n];
+            if seen.contains(&s) {
+                None
+            } else {
+                seen.push(s);
+                Some(s)
+            }
+        })
+    }
+
+    /// Number of distinct SGSs on the ring.
+    pub fn sgs_count(&self) -> usize {
+        let mut ids: Vec<u16> = self.points.iter().map(|(_, s)| s.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primary_is_deterministic() {
+        let ring = HashRing::new(8, 32);
+        assert_eq!(ring.primary(42), ring.primary(42));
+    }
+
+    #[test]
+    fn successors_cover_all_sgs_exactly_once() {
+        let ring = HashRing::new(8, 32);
+        let order: Vec<SgsId> = ring.successors(7).collect();
+        assert_eq!(order.len(), 8);
+        let mut ids: Vec<u16> = order.iter().map(|s| s.0).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<u16>>());
+        // first successor == primary
+        assert_eq!(order[0], ring.primary(7));
+    }
+
+    #[test]
+    fn distribution_is_roughly_balanced() {
+        // "no single SGS is overwhelmed by being responsible for a large
+        // share of DAGs" — with 8 SGSs and 4096 DAGs, each should get a
+        // share within 3x of fair.
+        let ring = HashRing::new(8, 64);
+        let mut counts = [0usize; 8];
+        for dag in 0..4096u64 {
+            counts[ring.primary(dag).0 as usize] += 1;
+        }
+        let fair = 4096 / 8;
+        for (i, c) in counts.iter().enumerate() {
+            assert!(
+                *c > fair / 3 && *c < fair * 3,
+                "sgs {i} got {c} (fair {fair}): {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn different_dags_get_spread_out_primaries() {
+        let ring = HashRing::new(4, 32);
+        let primaries: std::collections::HashSet<u16> =
+            (0..64u64).map(|d| ring.primary(d).0).collect();
+        assert_eq!(primaries.len(), 4, "all SGSs used as primaries");
+    }
+
+    #[test]
+    fn single_sgs_ring() {
+        let ring = HashRing::new(1, 8);
+        assert_eq!(ring.primary(123), SgsId(0));
+        assert_eq!(ring.successors(123).count(), 1);
+        assert_eq!(ring.sgs_count(), 1);
+    }
+}

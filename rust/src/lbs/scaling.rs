@@ -1,0 +1,169 @@
+//! Per-DAG SGS scaling (§5.2, Pseudocode 2).
+//!
+//! The universal scaling indicator is the queuing delay requests of a DAG
+//! experience at each associated SGS. The LBS computes
+//!
+//! ```text
+//! weightedQDelay = Σᵢ Nᵢ·qᵢ / Σᵢ Nᵢ        (sandbox-weighted mean)
+//! scalingMetric  = weightedQDelay / slack(d)  (deadline-aware normalize)
+//! ```
+//!
+//! and scales out when the metric exceeds `ScaleOutThreshold` (0.3 in
+//! §7.5), in when it falls below the (much lower) scale-in threshold.
+//! Decisions are gated on every associated SGS's qdelay window being
+//! full, and windows are reset after each action so the next decision
+//! observes post-action behaviour — both prevent reacting to transients.
+
+use crate::config::Micros;
+use crate::sgs::SgsId;
+
+/// One SGS's piggybacked report for a DAG (§5.2.1: measured queuing
+/// delay + sandbox count ride on responses to the LBS).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SgsReport {
+    pub sgs: SgsId,
+    /// Proactive sandbox count for this DAG at the SGS (the weight Nᵢ).
+    pub sandboxes: u32,
+    /// Smoothed queuing delay (µs) for this DAG at the SGS.
+    pub qdelay_us: f64,
+    /// Whether the SGS's qdelay window has filled since the last reset.
+    pub window_full: bool,
+}
+
+/// Scaling decision for one DAG at one control evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Associate one more SGS.
+    Out,
+    /// Dissociate the most recently added SGS.
+    In,
+    /// Leave the association unchanged.
+    Hold,
+}
+
+/// Pseudocode 2: compute the metric and compare against thresholds.
+///
+/// `slack` is the DAG's static slack budget (deadline − critical-path
+/// exec); the normalization is what makes low-slack DAGs scale out more
+/// aggressively (Fig 10).
+pub fn evaluate(
+    reports: &[SgsReport],
+    slack: Micros,
+    scale_out_threshold: f64,
+    scale_in_threshold: f64,
+) -> (f64, ScaleDecision) {
+    let metric = scaling_metric(reports, slack);
+    let decision = if !reports.iter().all(|r| r.window_full) {
+        // §5.2.2: only decide once the observation windows are filled.
+        ScaleDecision::Hold
+    } else if metric > scale_out_threshold {
+        ScaleDecision::Out
+    } else if metric < scale_in_threshold {
+        ScaleDecision::In
+    } else {
+        ScaleDecision::Hold
+    };
+    (metric, decision)
+}
+
+/// The raw metric (exposed for tests/benches and the §7.4 overhead
+/// bench).
+pub fn scaling_metric(reports: &[SgsReport], slack: Micros) -> f64 {
+    if reports.is_empty() {
+        return 0.0;
+    }
+    let total_n: f64 = reports.iter().map(|r| f64::from(r.sandboxes.max(1))).sum();
+    let weighted: f64 = reports
+        .iter()
+        .map(|r| f64::from(r.sandboxes.max(1)) * r.qdelay_us)
+        .sum();
+    let weighted_qdelay = weighted / total_n;
+    // Guard: a DAG whose deadline equals its critical path has no slack;
+    // normalize by at least 1ms to keep the metric finite (such DAGs
+    // scale out at the slightest queuing).
+    let slack_us = (slack as f64).max(1_000.0);
+    weighted_qdelay / slack_us
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MS;
+
+    fn rep(sgs: u16, n: u32, q: f64, full: bool) -> SgsReport {
+        SgsReport {
+            sgs: SgsId(sgs),
+            sandboxes: n,
+            qdelay_us: q,
+            window_full: full,
+        }
+    }
+
+    #[test]
+    fn metric_is_sandbox_weighted() {
+        // SGS0: 9 sandboxes @ 100µs, SGS1: 1 sandbox @ 1000µs
+        let reports = [rep(0, 9, 100.0, true), rep(1, 1, 1000.0, true)];
+        let m = scaling_metric(&reports, 100 * MS);
+        // weighted mean = (900 + 1000)/10 = 190µs; / 100_000µs slack
+        assert!((m - 0.0019).abs() < 1e-9, "m {m}");
+    }
+
+    #[test]
+    fn lower_slack_scales_out_sooner() {
+        // same queuing delay, different slack → Fig 10 behaviour
+        let reports = [rep(0, 4, 20_000.0, true)];
+        let (_m_low, d_low) = evaluate(&reports, 50 * MS, 0.3, 0.05);
+        let (_m_high, d_high) = evaluate(&reports, 200 * MS, 0.3, 0.05);
+        assert_eq!(d_low, ScaleDecision::Out); // 20ms/50ms = 0.4 > 0.3
+        assert_eq!(d_high, ScaleDecision::Hold); // 20ms/200ms = 0.1
+    }
+
+    #[test]
+    fn scale_in_when_idle() {
+        let reports = [rep(0, 4, 100.0, true), rep(1, 4, 50.0, true)];
+        let (m, d) = evaluate(&reports, 100 * MS, 0.3, 0.05);
+        assert!(m < 0.05);
+        assert_eq!(d, ScaleDecision::In);
+    }
+
+    #[test]
+    fn hold_between_thresholds_prevents_oscillation() {
+        // metric between SIT and SOT → Hold
+        let reports = [rep(0, 1, 10_000.0, true)];
+        let (m, d) = evaluate(&reports, 100 * MS, 0.3, 0.05);
+        assert!(m > 0.05 && m < 0.3, "m {m}");
+        assert_eq!(d, ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn unfilled_window_gates_decision() {
+        let reports = [rep(0, 1, 1e9, false)]; // huge delay but window open
+        let (_, d) = evaluate(&reports, 100 * MS, 0.3, 0.05);
+        assert_eq!(d, ScaleDecision::Hold);
+        // any one unfilled window gates the whole decision
+        let reports = [rep(0, 1, 1e9, true), rep(1, 1, 1e9, false)];
+        let (_, d) = evaluate(&reports, 100 * MS, 0.3, 0.05);
+        assert_eq!(d, ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn zero_slack_guard() {
+        let reports = [rep(0, 1, 500.0, true)];
+        let m = scaling_metric(&reports, 0);
+        assert!(m.is_finite());
+        assert!((m - 0.5).abs() < 1e-9); // normalized by the 1ms floor
+    }
+
+    #[test]
+    fn empty_reports_zero_metric() {
+        assert_eq!(scaling_metric(&[], 100 * MS), 0.0);
+    }
+
+    #[test]
+    fn zero_sandbox_sgs_still_counts_via_floor() {
+        // a just-added SGS with no sandboxes yet shouldn't divide by zero
+        let reports = [rep(0, 0, 5_000.0, true)];
+        let m = scaling_metric(&reports, 100 * MS);
+        assert!((m - 0.05).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,48 @@
+//! # Archipelago
+//!
+//! A reproduction of *"Archipelago: A Scalable Low-Latency Serverless
+//! Platform"* (Singhvi et al., 2019) as a three-layer Rust + JAX + Pallas
+//! stack. This crate is Layer 3: the serving control plane — load
+//! balancing service (LBS), semi-global schedulers (SGS) over partitioned
+//! worker pools, proactive sandbox management — plus every substrate it
+//! needs (discrete-event cluster simulation, workload generation, metrics,
+//! baselines) and a PJRT runtime that executes the AOT-compiled JAX/Pallas
+//! function bodies with Python nowhere on the request path.
+//!
+//! ## Layout
+//!
+//! * [`util`] — offline substrates: JSON, RNG + distributions, stats,
+//!   CLI, bench harness, property testing, logging.
+//! * [`config`] — typed platform configuration.
+//! * [`dag`] — the application model: DAGs of functions with deadlines.
+//! * [`sim`] — discrete-event engine + virtual clock.
+//! * [`sandbox`] — sandbox lifecycle + proactive memory pool.
+//! * [`worker`] — worker-pool machines and per-core execution.
+//! * [`sgs`] — semi-global scheduler: SRSF queue, demand estimator,
+//!   placement + eviction policies (§4).
+//! * [`lbs`] — load balancing service: consistent hashing, lottery
+//!   routing, per-DAG SGS scaling (§5).
+//! * [`platform`] — full-system assembly + request lifecycle.
+//! * [`baseline`] — the paper's comparison stacks (§2.4, §7.1).
+//! * [`workload`] — arrival processes, C1–C4 classes, SAR synthesis.
+//! * [`metrics`] — collectors and reports.
+//! * [`state_store`] — durable service state + fault tolerance (§6.1).
+//! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`.
+//! * [`experiments`] — one harness per paper table/figure (§7).
+
+pub mod state_store;
+pub mod util;
+
+pub mod baseline;
+pub mod config;
+pub mod dag;
+pub mod experiments;
+pub mod lbs;
+pub mod metrics;
+pub mod platform;
+pub mod runtime;
+pub mod sandbox;
+pub mod sgs;
+pub mod sim;
+pub mod worker;
+pub mod workload;

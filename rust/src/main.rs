@@ -1,0 +1,282 @@
+//! The `archipelago` launcher.
+//!
+//! Subcommands:
+//!
+//! * `simulate` — run the simulated platform on a C1–C4 macrobenchmark
+//!   mix (or a config file) and print the latency/deadline report.
+//! * `baseline` — same workload on a baseline stack (fifo | sparrow).
+//! * `figures`  — regenerate the paper's tables/figures (CSV + summary).
+//! * `serve`    — real-time serving of the compiled artifacts (PJRT on
+//!   the request path); demo load generator included.
+//! * `validate` — quick self-check: config, artifacts, determinism.
+
+use std::process::ExitCode;
+
+use archipelago::baseline::{BaselineKind, BaselineOptions, BaselineSim};
+use archipelago::config::{Config, SchedPolicy, SEC};
+use archipelago::experiments::{run_all, run_one, ExpContext};
+use archipelago::platform::realtime::Server;
+use archipelago::platform::{SimOptions, SimPlatform};
+use archipelago::util::cli::{Args, CliError, Command};
+use archipelago::util::logging;
+use archipelago::workload::{macro_mix, peak_offered_cores, WorkloadKind};
+
+fn main() -> ExitCode {
+    logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(sub) = argv.first().map(|s| s.as_str()) else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let rest = &argv[1..];
+    let result = match sub {
+        "simulate" => cmd_simulate(rest),
+        "baseline" => cmd_baseline(rest),
+        "figures" => cmd_figures(rest),
+        "serve" => cmd_serve(rest),
+        "validate" => cmd_validate(rest),
+        "--help" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(CliError(format!("unknown subcommand '{other}'\n{}", usage()))),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() -> String {
+    "archipelago — reproduction of 'Archipelago: A Scalable Low-Latency \
+     Serverless Platform'\n\nUsage: archipelago <subcommand> [options]\n\n\
+     Subcommands:\n\
+     \x20 simulate   run the platform on a macrobenchmark mix\n\
+     \x20 baseline   run a baseline stack (--kind fifo|sparrow)\n\
+     \x20 figures    regenerate paper tables/figures (--all or --id <id>)\n\
+     \x20 serve      real-time PJRT serving demo (needs `make artifacts`)\n\
+     \x20 validate   config + artifact + determinism self-check\n\n\
+     Run `archipelago <subcommand> --help` for options."
+        .into()
+}
+
+fn parse_workload(args: &Args) -> Result<WorkloadKind, CliError> {
+    match args.get_or("workload", "w2") {
+        "w1" => Ok(WorkloadKind::W1),
+        "w2" => Ok(WorkloadKind::W2),
+        other => Err(CliError(format!("--workload must be w1|w2, got '{other}'"))),
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config, CliError> {
+    match args.get("config") {
+        Some(path) => Config::from_file(path).map_err(|e| CliError(e.to_string())),
+        None => Ok(Config::default()),
+    }
+}
+
+fn scaled_mix(kind: WorkloadKind, cfg: &Config, seed: u64, dags_per_class: u64) -> Vec<archipelago::workload::App> {
+    let probe = macro_mix(kind, dags_per_class as usize, 1.0, seed);
+    let peak: f64 = probe.iter().map(peak_offered_cores).sum();
+    let scale = cfg.total_cores() as f64 / peak;
+    macro_mix(kind, dags_per_class as usize, scale, seed)
+}
+
+fn cmd_simulate(raw: &[String]) -> Result<(), CliError> {
+    let cmd = Command::new("simulate", "run the simulated Archipelago platform")
+        .opt("config", "platform config JSON (default: paper testbed)")
+        .opt("workload", "w1 | w2 (default w2)")
+        .opt("seed", "rng seed (default 42)")
+        .opt("duration", "virtual seconds (default 120)")
+        .opt("warmup", "warmup seconds excluded from metrics (default 30)")
+        .opt("dags-per-class", "DAGs per class C1-C4 (default 2)");
+    let args = cmd.parse(raw)?;
+    let cfg = load_config(&args)?;
+    let kind = parse_workload(&args)?;
+    let seed = args.get_u64("seed", 42)?;
+    let duration = args.get_u64("duration", 120)?;
+    let warmup = args.get_u64("warmup", 30)?;
+    let dpc = args.get_u64("dags-per-class", 2)?;
+    let apps = scaled_mix(kind, &cfg, seed, dpc);
+    println!(
+        "simulating {:?} with {} DAGs on {} SGS x {} workers x {} cores for {duration}s",
+        kind,
+        apps.len(),
+        cfg.cluster.num_sgs,
+        cfg.cluster.workers_per_sgs,
+        cfg.cluster.cores_per_worker
+    );
+    let opts = SimOptions {
+        seed,
+        horizon: duration * SEC,
+        warmup: warmup * SEC,
+        ..SimOptions::default()
+    };
+    let mut p = SimPlatform::new(cfg, apps, opts);
+    let row = p.run();
+    println!("{}", row.format_line("archipelago"));
+    println!(
+        "cold starts: {} | scale-outs: {} | scale-ins: {} | events: {}",
+        p.total_cold_starts(),
+        p.lbs().scale_outs(),
+        p.lbs().scale_ins(),
+        p.events_dispatched()
+    );
+    Ok(())
+}
+
+fn cmd_baseline(raw: &[String]) -> Result<(), CliError> {
+    let cmd = Command::new("baseline", "run a baseline serving stack")
+        .opt("kind", "fifo | sparrow (default fifo)")
+        .opt("workload", "w1 | w2 (default w2)")
+        .opt("seed", "rng seed (default 42)")
+        .opt("duration", "virtual seconds (default 120)")
+        .opt("pool-mb", "per-worker container pool MB (default 8192)");
+    let args = cmd.parse(raw)?;
+    let kind = match args.get_or("kind", "fifo") {
+        "fifo" => BaselineKind::CentralizedFifo,
+        "sparrow" => BaselineKind::Sparrow { probes: 2 },
+        other => return Err(CliError(format!("--kind must be fifo|sparrow, got '{other}'"))),
+    };
+    let cfg = Config::default();
+    let wkind = parse_workload(&args)?;
+    let seed = args.get_u64("seed", 42)?;
+    let duration = args.get_u64("duration", 120)?;
+    let pool = args.get_u64("pool-mb", 8192)?;
+    let apps = scaled_mix(wkind, &cfg, seed, 2);
+    let opts = BaselineOptions {
+        kind,
+        seed,
+        horizon: duration * SEC,
+        warmup: duration * SEC / 4,
+        decision_cost: 100,
+        ..BaselineOptions::default()
+    };
+    let mut sim = BaselineSim::new(
+        cfg.cluster.num_sgs * cfg.cluster.workers_per_sgs,
+        cfg.cluster.cores_per_worker,
+        pool,
+        apps,
+        opts,
+    );
+    let row = sim.run();
+    println!("{}", row.format_line(&format!("baseline ({kind:?})")));
+    println!("cold starts (total incl. warmup): {}", sim.cold_starts());
+    Ok(())
+}
+
+fn cmd_figures(raw: &[String]) -> Result<(), CliError> {
+    let cmd = Command::new("figures", "regenerate the paper's tables and figures")
+        .flag("all", "run every experiment")
+        .opt("id", "one experiment id (fig1|fig2abc|fig2d|table1|fig7|fig8|fig9|lru|fig10|fig11|gradual|fig12|fig13)")
+        .opt("out-dir", "output directory for CSVs (default results)")
+        .opt("seed", "rng seed (default 42)")
+        .flag("quick", "reduced horizons (CI/bench mode)");
+    let args = cmd.parse(raw)?;
+    let mut ctx = ExpContext::new(args.get_or("out-dir", "results"));
+    ctx.quick = args.has("quick");
+    ctx.seed = args.get_u64("seed", 42)?;
+    std::fs::create_dir_all(&ctx.out_dir).map_err(|e| CliError(e.to_string()))?;
+    let results = if args.has("all") {
+        run_all(&ctx)
+    } else if let Some(id) = args.get("id") {
+        vec![run_one(id, &ctx)
+            .ok_or_else(|| CliError(format!("unknown experiment id '{id}'")))?]
+    } else {
+        return Err(CliError("pass --all or --id <id>".into()));
+    };
+    let mut report = String::new();
+    for r in &results {
+        let block = r.render();
+        println!("{block}");
+        report.push_str(&block);
+        report.push('\n');
+    }
+    let report_path = ctx.out_dir.join("summary.txt");
+    std::fs::write(&report_path, &report).map_err(|e| CliError(e.to_string()))?;
+    println!("summary written to {}", report_path.display());
+    Ok(())
+}
+
+fn cmd_serve(raw: &[String]) -> Result<(), CliError> {
+    let cmd = Command::new("serve", "real-time PJRT serving demo")
+        .opt("artifacts", "artifact directory (default artifacts)")
+        .opt("workers", "worker threads (default 2)")
+        .opt("requests", "demo requests to push (default 200)")
+        .opt("policy", "srsf | fifo (default srsf)");
+    let args = cmd.parse(raw)?;
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    if !dir.join("manifest.json").exists() {
+        return Err(CliError(format!(
+            "no manifest in {} — run `make artifacts` first",
+            dir.display()
+        )));
+    }
+    let workers = args.get_u64("workers", 2)? as usize;
+    let n = args.get_u64("requests", 200)?;
+    let policy = match args.get_or("policy", "srsf") {
+        "srsf" => SchedPolicy::Srsf,
+        "fifo" => SchedPolicy::Fifo,
+        other => return Err(CliError(format!("--policy must be srsf|fifo, got '{other}'"))),
+    };
+    println!("starting server: {workers} workers, {policy:?}");
+    let server = Server::start(&dir, workers, policy, &["mlp_infer_b1"])
+        .map_err(|e| CliError(e.to_string()))?;
+    let mut lat = archipelago::util::stats::Summary::new();
+    let mut colds = 0u64;
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let input: Vec<f32> = (0..256).map(|j| ((i + j) as f32 * 0.01).sin()).collect();
+        let rx = server.submit("mlp_infer_b1", input, 100_000);
+        let c = rx.recv().map_err(|e| CliError(e.to_string()))?;
+        lat.record(c.e2e_us as f64);
+        colds += u64::from(c.cold);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n} requests: p50={:.0}us p99={:.0}us | {:.0} req/s | colds={colds}",
+        lat.quantile(0.5),
+        lat.quantile(0.99),
+        n as f64 / wall
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_validate(raw: &[String]) -> Result<(), CliError> {
+    let cmd = Command::new("validate", "config + artifact + determinism self-check")
+        .opt("config", "platform config JSON to validate");
+    let args = cmd.parse(raw)?;
+    let cfg = load_config(&args)?;
+    cfg.validate().map_err(|e| CliError(e.to_string()))?;
+    println!("config OK ({} total cores)", cfg.total_cores());
+    // determinism check: two short identical sims must agree exactly
+    let run = || {
+        let apps = scaled_mix(WorkloadKind::W2, &cfg, 1, 1);
+        let opts = SimOptions {
+            seed: 1,
+            horizon: 10 * SEC,
+            warmup: 2 * SEC,
+            ..SimOptions::default()
+        };
+        let mut p = SimPlatform::new(cfg.clone(), apps, opts);
+        let row = p.run();
+        (row.completed, row.p99, row.cold_starts)
+    };
+    if run() != run() {
+        return Err(CliError("determinism check FAILED".into()));
+    }
+    println!("determinism OK");
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        let m = archipelago::runtime::Manifest::load(&dir)
+            .map_err(|e| CliError(e.to_string()))?;
+        println!("artifacts OK ({} entries)", m.entries.len());
+    } else {
+        println!("artifacts not built (run `make artifacts`) — skipped");
+    }
+    Ok(())
+}

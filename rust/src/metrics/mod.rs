@@ -1,0 +1,352 @@
+//! Metrics collection + reporting (§7.1 "Metrics").
+//!
+//! Tracks the paper's four evaluation quantities per DAG class and
+//! globally: end-to-end latency, % deadlines met, queuing delay, and
+//! cold-start counts — plus time series for the figure harnesses
+//! (per-interval deadline-met rates for Fig 9, sandbox counts for
+//! Fig 8b/10/11). Latency distributions use the log-bucketed histogram
+//! so multi-million-request runs stay constant-memory.
+
+use std::collections::BTreeMap;
+
+use crate::config::{Micros, SEC};
+use crate::dag::DagId;
+use crate::util::json::{self, Json};
+use crate::util::stats::LogHistogram;
+
+/// Outcome of a single completed request.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestOutcome {
+    pub dag: DagId,
+    pub arrival: Micros,
+    pub completion: Micros,
+    pub deadline_abs: Micros,
+    /// Cold starts among this request's function executions.
+    pub cold_starts: u32,
+}
+
+impl RequestOutcome {
+    pub fn e2e_latency(&self) -> Micros {
+        self.completion.saturating_sub(self.arrival)
+    }
+
+    pub fn deadline_met(&self) -> bool {
+        self.completion <= self.deadline_abs
+    }
+}
+
+/// Aggregated stats for one group (a DAG, a class, or the whole run).
+#[derive(Debug, Clone)]
+pub struct GroupStats {
+    pub e2e: LogHistogram,
+    pub qdelay: LogHistogram,
+    pub completed: u64,
+    pub deadlines_met: u64,
+    pub cold_starts: u64,
+}
+
+impl Default for GroupStats {
+    fn default() -> Self {
+        GroupStats {
+            e2e: LogHistogram::new(),
+            qdelay: LogHistogram::new(),
+            completed: 0,
+            deadlines_met: 0,
+            cold_starts: 0,
+        }
+    }
+}
+
+impl GroupStats {
+    pub fn deadline_met_rate(&self) -> f64 {
+        if self.completed == 0 {
+            return 1.0;
+        }
+        self.deadlines_met as f64 / self.completed as f64
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        1.0 - self.deadline_met_rate()
+    }
+}
+
+/// The run-wide collector.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub total: GroupStats,
+    pub per_dag: BTreeMap<u32, GroupStats>,
+    /// Per-interval (deadline-met, completed) counts for Fig 9-style
+    /// interval plots; interval length set by `interval_len`.
+    interval_len: Micros,
+    intervals: Vec<(u64, u64)>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            interval_len: SEC,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_interval(interval_len: Micros) -> Self {
+        Metrics {
+            interval_len,
+            ..Default::default()
+        }
+    }
+
+    /// Record a completed request.
+    pub fn record_completion(&mut self, outcome: &RequestOutcome) {
+        let lat = outcome.e2e_latency();
+        let met = outcome.deadline_met();
+        for g in [
+            &mut self.total,
+            self.per_dag.entry(outcome.dag.0).or_default(),
+        ] {
+            g.e2e.record(lat);
+            g.completed += 1;
+            g.deadlines_met += u64::from(met);
+            g.cold_starts += u64::from(outcome.cold_starts);
+        }
+        let idx = (outcome.completion / self.interval_len) as usize;
+        if self.intervals.len() <= idx {
+            self.intervals.resize(idx + 1, (0, 0));
+        }
+        self.intervals[idx].0 += u64::from(met);
+        self.intervals[idx].1 += 1;
+    }
+
+    /// Record one function's queuing delay.
+    pub fn record_qdelay(&mut self, dag: DagId, delay: Micros) {
+        self.total.qdelay.record(delay);
+        self.per_dag.entry(dag.0).or_default().qdelay.record(delay);
+    }
+
+    pub fn dag(&self, dag: DagId) -> Option<&GroupStats> {
+        self.per_dag.get(&dag.0)
+    }
+
+    /// Per-interval deadline-met fractions (Fig 9 series).
+    pub fn interval_met_rates(&self) -> Vec<f64> {
+        self.intervals
+            .iter()
+            .map(|&(met, n)| if n == 0 { 1.0 } else { met as f64 / n as f64 })
+            .collect()
+    }
+
+    /// The paper's headline row: p50/p90/p99/p999/max E2E latency (µs),
+    /// % deadlines met, cold starts.
+    pub fn summary_row(&self) -> SummaryRow {
+        let (p50, p90, p99, p999, max) = self.total.e2e.tail_summary();
+        SummaryRow {
+            completed: self.total.completed,
+            p50,
+            p90,
+            p99,
+            p999,
+            max,
+            deadline_met_rate: self.total.deadline_met_rate(),
+            cold_starts: self.total.cold_starts,
+            qdelay_p50: self.total.qdelay.quantile(0.5),
+            qdelay_p99: self.total.qdelay.quantile(0.99),
+            qdelay_p999: self.total.qdelay.quantile(0.999),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let row = self.summary_row();
+        let mut per_dag = Vec::new();
+        for (id, g) in &self.per_dag {
+            let (p50, _, p99, p999, max) = g.e2e.tail_summary();
+            per_dag.push(json::obj(vec![
+                ("dag", Json::Int(*id as i64)),
+                ("completed", Json::Int(g.completed as i64)),
+                ("p50_us", Json::Int(p50 as i64)),
+                ("p99_us", Json::Int(p99 as i64)),
+                ("p999_us", Json::Int(p999 as i64)),
+                ("max_us", Json::Int(max as i64)),
+                ("deadline_met_rate", Json::Num(g.deadline_met_rate())),
+                ("cold_starts", Json::Int(g.cold_starts as i64)),
+            ]));
+        }
+        json::obj(vec![
+            ("completed", Json::Int(row.completed as i64)),
+            ("p50_us", Json::Int(row.p50 as i64)),
+            ("p90_us", Json::Int(row.p90 as i64)),
+            ("p99_us", Json::Int(row.p99 as i64)),
+            ("p999_us", Json::Int(row.p999 as i64)),
+            ("max_us", Json::Int(row.max as i64)),
+            ("deadline_met_rate", Json::Num(row.deadline_met_rate)),
+            ("cold_starts", Json::Int(row.cold_starts as i64)),
+            ("qdelay_p50_us", Json::Int(row.qdelay_p50 as i64)),
+            ("qdelay_p99_us", Json::Int(row.qdelay_p99 as i64)),
+            ("per_dag", Json::Arr(per_dag)),
+        ])
+    }
+}
+
+/// Flat summary used by reports and EXPERIMENTS.md tables.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SummaryRow {
+    pub completed: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub max: u64,
+    pub deadline_met_rate: f64,
+    pub cold_starts: u64,
+    pub qdelay_p50: u64,
+    pub qdelay_p99: u64,
+    pub qdelay_p999: u64,
+}
+
+impl SummaryRow {
+    pub fn format_line(&self, label: &str) -> String {
+        format!(
+            "{label:<22} n={:<9} p50={:<9} p99={:<10} p99.9={:<10} max={:<10} met={:>6.2}%  cold={}",
+            self.completed,
+            fmt_us(self.p50),
+            fmt_us(self.p99),
+            fmt_us(self.p999),
+            fmt_us(self.max),
+            self.deadline_met_rate * 100.0,
+            self.cold_starts,
+        )
+    }
+}
+
+/// Render microseconds with adaptive units.
+pub fn fmt_us(us: u64) -> String {
+    if us < 1_000 {
+        format!("{us}µs")
+    } else if us < 1_000_000 {
+        format!("{:.2}ms", us as f64 / 1_000.0)
+    } else {
+        format!("{:.2}s", us as f64 / 1_000_000.0)
+    }
+}
+
+/// A simple CSV writer for the figure harnesses.
+#[derive(Debug, Default)]
+pub struct Csv {
+    rows: Vec<String>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv {
+            rows: vec![header.join(",")],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.join(","));
+    }
+
+    pub fn to_string(&self) -> String {
+        self.rows.join("\n") + "\n"
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MS;
+
+    fn outcome(dag: u32, arrival: Micros, lat: Micros, deadline: Micros, cold: u32) -> RequestOutcome {
+        RequestOutcome {
+            dag: DagId(dag),
+            arrival,
+            completion: arrival + lat,
+            deadline_abs: arrival + deadline,
+            cold_starts: cold,
+        }
+    }
+
+    #[test]
+    fn outcome_latency_and_deadline() {
+        let o = outcome(0, 100, 50, 80, 1);
+        assert_eq!(o.e2e_latency(), 50);
+        assert!(o.deadline_met());
+        let o = outcome(0, 100, 90, 80, 0);
+        assert!(!o.deadline_met());
+    }
+
+    #[test]
+    fn aggregation_total_and_per_dag() {
+        let mut m = Metrics::new();
+        m.record_completion(&outcome(0, 0, 10 * MS, 20 * MS, 1));
+        m.record_completion(&outcome(0, 0, 30 * MS, 20 * MS, 0));
+        m.record_completion(&outcome(1, 0, 5 * MS, 20 * MS, 0));
+        assert_eq!(m.total.completed, 3);
+        assert_eq!(m.total.deadlines_met, 2);
+        assert_eq!(m.total.cold_starts, 1);
+        assert_eq!(m.dag(DagId(0)).unwrap().completed, 2);
+        assert!((m.dag(DagId(0)).unwrap().deadline_met_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(m.dag(DagId(1)).unwrap().completed, 1);
+    }
+
+    #[test]
+    fn interval_series() {
+        let mut m = Metrics::with_interval(SEC);
+        // second 0: 2 met; second 2: 1 missed
+        m.record_completion(&outcome(0, 0, 10 * MS, 20 * MS, 0));
+        m.record_completion(&outcome(0, 100 * MS, 10 * MS, 20 * MS, 0));
+        m.record_completion(&outcome(0, 2 * SEC, 50 * MS, 20 * MS, 0));
+        let rates = m.interval_met_rates();
+        assert_eq!(rates.len(), 3);
+        assert_eq!(rates[0], 1.0);
+        assert_eq!(rates[1], 1.0, "empty interval counts as met");
+        assert_eq!(rates[2], 0.0);
+    }
+
+    #[test]
+    fn summary_row_and_json() {
+        let mut m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_completion(&outcome(0, 0, i * MS, 200 * MS, 0));
+        }
+        m.record_qdelay(DagId(0), 500);
+        let row = m.summary_row();
+        assert_eq!(row.completed, 100);
+        assert!(row.p50 >= 45 * MS && row.p50 <= 55 * MS, "{}", row.p50);
+        assert!(row.p99 >= 95 * MS, "{}", row.p99);
+        assert_eq!(row.deadline_met_rate, 1.0);
+        let j = m.to_json();
+        assert_eq!(j.get("completed").unwrap().as_i64(), Some(100));
+        assert!(j.get("per_dag").unwrap().as_arr().unwrap().len() == 1);
+        assert!(row.format_line("test").contains("met=100.00%"));
+    }
+
+    #[test]
+    fn fmt_us_units() {
+        assert_eq!(fmt_us(900), "900µs");
+        assert_eq!(fmt_us(1_500), "1.50ms");
+        assert_eq!(fmt_us(2_500_000), "2.50s");
+    }
+
+    #[test]
+    fn csv_builder() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "2".into()]);
+        assert_eq!(c.to_string(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn empty_metrics_sane() {
+        let m = Metrics::new();
+        let row = m.summary_row();
+        assert_eq!(row.completed, 0);
+        assert_eq!(row.deadline_met_rate, 1.0);
+        assert!(m.interval_met_rates().is_empty());
+    }
+}

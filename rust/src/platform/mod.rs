@@ -1,0 +1,915 @@
+//! Full-system assembly: LBS + SGSs + worker pools driven by the
+//! discrete-event engine (§3's request control flow, Fig 3).
+//!
+//! A request arrives at the LBS, is routed (lottery, §5.2.3) to one SGS
+//! after the routing overhead, gets enqueued there, is scheduled SRSF
+//! onto a worker core (paying setup time iff no warm sandbox), and its
+//! downstream DAG functions are triggered as dependencies complete. In
+//! the background, each SGS runs its estimation loop (§4.3.1) and the
+//! LBS runs its per-DAG scaling loop (Pseudocode 2). The identical
+//! policy structs also drive the real-time path (`realtime`).
+
+pub mod realtime;
+
+use std::collections::HashMap;
+
+use crate::util::fasthash::FastMap;
+
+use crate::config::{Config, Micros};
+use crate::dag::{DagId, DagRegistry, FnId};
+use crate::lbs::{Lbs, ScaleAction, SgsReport};
+use crate::metrics::{Metrics, RequestOutcome};
+use crate::sgs::{QueuedFn, RequestId, SetupStart, Sgs, SgsId};
+use crate::sim::{run_until, EventQueue};
+use crate::util::rng::Rng;
+use crate::worker::WorkerId;
+use crate::workload::App;
+
+/// Simulation events.
+#[derive(Debug)]
+enum Event {
+    /// Next request of app `app_idx` arrives at the LBS.
+    Arrival { app_idx: usize },
+    /// A routed request (or a ready downstream function) reaches its SGS.
+    SgsEnqueue {
+        sgs: SgsId,
+        queued: QueuedFn,
+        is_root: bool,
+    },
+    /// A dispatched function finishes on a worker.
+    FnComplete {
+        sgs: SgsId,
+        worker: WorkerId,
+        epoch: u64,
+        req: RequestId,
+        f: FnId,
+        cold: bool,
+    },
+    /// A proactive sandbox setup completes.
+    SetupDone {
+        sgs: SgsId,
+        worker: WorkerId,
+        epoch: u64,
+        f: FnId,
+    },
+    /// Periodic estimation at one SGS (§4.3.1).
+    EstimatorTick { sgs: SgsId },
+    /// Periodic LBS scaling evaluation (§5.2).
+    LbsControlTick,
+    /// Fault injection (§6.1).
+    WorkerFail { sgs: SgsId, worker: WorkerId },
+    WorkerRecover { sgs: SgsId, worker: WorkerId },
+    SgsFail { sgs: SgsId },
+}
+
+/// Per-request in-flight bookkeeping.
+#[derive(Debug)]
+struct RequestState {
+    dag: DagId,
+    arrival: Micros,
+    deadline_abs: Micros,
+    sgs: SgsId,
+    /// Outstanding parent count per function.
+    pending_parents: Vec<u16>,
+    /// Functions not yet completed.
+    remaining: usize,
+    cold_starts: u32,
+    /// Sampled execution time per function for this request.
+    exec_times: Vec<Micros>,
+}
+
+/// Knobs for a simulation run.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    pub seed: u64,
+    /// Virtual run length.
+    pub horizon: Micros,
+    /// Completions before this time are excluded from metrics (system
+    /// warm-up transient).
+    pub warmup: Micros,
+    /// Per-request execution-time noise: exec × U[1−f, 1+f].
+    pub exec_noise_frac: f64,
+    /// Record per-tick time series (sandbox counts, SGS counts) for the
+    /// figure harnesses.
+    pub record_series: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            seed: 42,
+            horizon: 60 * crate::config::SEC,
+            warmup: 5 * crate::config::SEC,
+            exec_noise_frac: 0.05,
+            record_series: false,
+        }
+    }
+}
+
+/// Named time series recorded during a run (figure data).
+pub type Series = HashMap<String, Vec<(Micros, f64)>>;
+
+/// The simulated Archipelago deployment.
+pub struct SimPlatform {
+    pub cfg: Config,
+    pub registry: DagRegistry,
+    apps: Vec<App>,
+    lbs: Lbs,
+    sgss: Vec<Sgs>,
+    events: EventQueue<Event>,
+    pub metrics: Metrics,
+    requests: FastMap<u64, RequestState>,
+    next_req: u64,
+    rng: Rng,
+    opts: SimOptions,
+    pub series: Series,
+    /// Reused dispatch buffer (hot path, avoids per-event allocation).
+    dispatch_buf: Vec<crate::sgs::Dispatch>,
+    started: bool,
+}
+
+impl SimPlatform {
+    /// Build a platform hosting `apps` under `cfg`.
+    pub fn new(cfg: Config, apps: Vec<App>, opts: SimOptions) -> Self {
+        cfg.validate().expect("invalid config");
+        let mut registry = DagRegistry::new();
+        let mut apps = apps;
+        for app in apps.iter_mut() {
+            let id = registry.register(app.dag.clone());
+            app.dag.id = id; // keep the app copy in sync
+        }
+        let sgss: Vec<Sgs> = (0..cfg.cluster.num_sgs)
+            .map(|i| {
+                Sgs::new(
+                    SgsId(i as u16),
+                    cfg.cluster.workers_per_sgs,
+                    cfg.cluster.cores_per_worker,
+                    cfg.cluster.proactive_pool_mb,
+                    cfg.sgs.clone(),
+                )
+            })
+            .collect();
+        let lbs = Lbs::new(cfg.lbs.clone(), cfg.cluster.num_sgs, opts.seed);
+        SimPlatform {
+            registry,
+            apps,
+            lbs,
+            sgss,
+            events: EventQueue::new(),
+            metrics: Metrics::new(),
+            requests: FastMap::default(),
+            next_req: 0,
+            rng: Rng::new(opts.seed),
+            opts,
+            cfg,
+            series: HashMap::new(),
+            dispatch_buf: Vec::new(),
+            started: false,
+        }
+    }
+
+    pub fn now(&self) -> Micros {
+        self.events.now()
+    }
+
+    pub fn lbs(&self) -> &Lbs {
+        &self.lbs
+    }
+
+    pub fn sgs(&self, id: SgsId) -> &Sgs {
+        &self.sgss[id.0 as usize]
+    }
+
+    pub fn sgs_count(&self) -> usize {
+        self.sgss.len()
+    }
+
+    pub fn total_cold_starts(&self) -> u64 {
+        self.sgss.iter().map(|s| s.cold_starts()).sum()
+    }
+
+    pub fn events_dispatched(&self) -> u64 {
+        self.events.dispatched()
+    }
+
+    /// Inject a worker fail-stop at virtual time `at`.
+    pub fn inject_worker_failure(&mut self, at: Micros, sgs: SgsId, worker: WorkerId) {
+        self.events.push_at(at, Event::WorkerFail { sgs, worker });
+    }
+
+    pub fn inject_worker_recovery(&mut self, at: Micros, sgs: SgsId, worker: WorkerId) {
+        self.events.push_at(at, Event::WorkerRecover { sgs, worker });
+    }
+
+    /// Inject an SGS fail-stop (§6.1: state recovers from the external
+    /// store; queued requests are re-routed).
+    pub fn inject_sgs_failure(&mut self, at: Micros, sgs: SgsId) {
+        self.events.push_at(at, Event::SgsFail { sgs });
+    }
+
+    fn bootstrap(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
+        // Register every app and seed its first arrival.
+        for idx in 0..self.apps.len() {
+            let dag_id = self.apps[idx].dag.id;
+            self.lbs.register_dag(dag_id);
+            let first = {
+                let app = &mut self.apps[idx];
+                app.arrivals.next_arrival(0, &mut self.rng)
+            };
+            self.events.push_at(first, Event::Arrival { app_idx: idx });
+        }
+        // Periodic loops.
+        let est = self.cfg.sgs.estimate_interval;
+        for s in 0..self.sgss.len() {
+            self.events
+                .push_at(est, Event::EstimatorTick { sgs: SgsId(s as u16) });
+        }
+        self.events
+            .push_at(self.cfg.lbs.control_interval, Event::LbsControlTick);
+    }
+
+    /// Run the simulation to the horizon and return the metrics summary.
+    pub fn run(&mut self) -> crate::metrics::SummaryRow {
+        self.bootstrap();
+        let horizon = self.opts.horizon;
+        // The engine hands us events; we can't borrow self both as queue
+        // owner and handler, so we temporarily move the queue out.
+        let mut queue = std::mem::take(&mut self.events);
+        run_until(&mut queue, self, horizon, |q, platform, ev| {
+            platform.handle(q, ev);
+        });
+        self.events = queue;
+        self.metrics.summary_row()
+    }
+
+    // ------------------------------------------------------------------
+    // Event handlers
+    // ------------------------------------------------------------------
+
+    fn handle(&mut self, q: &mut EventQueue<Event>, ev: Event) {
+        match ev {
+            Event::Arrival { app_idx } => self.on_arrival(q, app_idx),
+            Event::SgsEnqueue {
+                sgs,
+                queued,
+                is_root,
+            } => {
+                self.on_enqueue(q, sgs, queued, is_root);
+            }
+            Event::FnComplete {
+                sgs,
+                worker,
+                epoch,
+                req,
+                f,
+                cold,
+            } => self.on_fn_complete(q, sgs, worker, epoch, req, f, cold),
+            Event::SetupDone {
+                sgs,
+                worker,
+                epoch,
+                f,
+            } => self.on_setup_done(q, sgs, worker, epoch, f),
+            Event::EstimatorTick { sgs } => self.on_estimator_tick(q, sgs),
+            Event::LbsControlTick => self.on_lbs_control(q),
+            Event::WorkerFail { sgs, worker } => {
+                self.sgss[sgs.0 as usize].fail_worker(worker);
+            }
+            Event::WorkerRecover { sgs, worker } => {
+                self.sgss[sgs.0 as usize].recover_worker(worker);
+            }
+            Event::SgsFail { sgs } => self.on_sgs_fail(q, sgs),
+        }
+    }
+
+    fn on_arrival(&mut self, q: &mut EventQueue<Event>, app_idx: usize) {
+        let now = q.now();
+        let dag_id = self.apps[app_idx].dag.id;
+        let dag = self.registry.get(dag_id);
+        // Build the request.
+        let req_id = RequestId(self.next_req);
+        self.next_req += 1;
+        let noise = self.opts.exec_noise_frac;
+        let exec_times: Vec<Micros> = dag
+            .functions
+            .iter()
+            .map(|f| {
+                if noise > 0.0 {
+                    let m = self.rng.range_f64(1.0 - noise, 1.0 + noise);
+                    ((f.exec_time as f64) * m) as Micros
+                } else {
+                    f.exec_time
+                }
+            })
+            .collect();
+        let state = RequestState {
+            dag: dag_id,
+            arrival: now,
+            deadline_abs: now + dag.deadline,
+            sgs: SgsId(0), // set below
+            pending_parents: dag.parent_count.clone(),
+            remaining: dag.len(),
+            cold_starts: 0,
+            exec_times,
+        };
+        // Route (the paper's per-request LBS decision).
+        let sgs = self.lbs.route(dag_id);
+        let mut state = state;
+        state.sgs = sgs;
+        // Enqueue the roots after the routing overhead.
+        let enqueue_at = now + self.cfg.lbs.route_overhead;
+        for &root in &self.registry.get(dag_id).roots {
+            let queued = self.make_queued(&state, req_id, dag_id, root, enqueue_at);
+            q.push_at(
+                enqueue_at,
+                Event::SgsEnqueue {
+                    sgs,
+                    queued,
+                    is_root: true,
+                },
+            );
+        }
+        self.requests.insert(req_id.0, state);
+        // Next arrival of this app.
+        let next = self.apps[app_idx]
+            .arrivals
+            .next_arrival(now, &mut self.rng);
+        q.push_at(next, Event::Arrival { app_idx });
+    }
+
+    fn make_queued(
+        &self,
+        state: &RequestState,
+        req: RequestId,
+        dag_id: DagId,
+        fn_idx: u16,
+        enqueued_at: Micros,
+    ) -> QueuedFn {
+        let dag = self.registry.get(dag_id);
+        let spec = &dag.functions[fn_idx as usize];
+        QueuedFn {
+            req,
+            f: dag.fn_id(fn_idx),
+            dag: dag_id,
+            enqueued_at,
+            deadline_abs: state.deadline_abs,
+            remaining_work: dag.cpl[fn_idx as usize],
+            exec_time: state.exec_times[fn_idx as usize],
+            setup_time: spec.setup_time,
+            mem_mb: spec.mem_mb,
+        }
+    }
+
+    fn on_enqueue(
+        &mut self,
+        q: &mut EventQueue<Event>,
+        sgs: SgsId,
+        queued: QueuedFn,
+        is_root: bool,
+    ) {
+        let s = &mut self.sgss[sgs.0 as usize];
+        if !s.is_alive() {
+            // Failure between routing and enqueue: reroute through LBS.
+            let dag = queued.dag;
+            let alt = self.lbs.route(dag);
+            if alt != sgs {
+                q.push_after(
+                    self.cfg.lbs.route_overhead,
+                    Event::SgsEnqueue {
+                        sgs: alt,
+                        queued,
+                        is_root,
+                    },
+                );
+            }
+            return;
+        }
+        s.enqueue(queued, is_root);
+        self.dispatch(q, sgs);
+    }
+
+    /// Run the SGS dispatch loop and schedule completion events.
+    fn dispatch(&mut self, q: &mut EventQueue<Event>, sgs: SgsId) {
+        let now = q.now();
+        let s = &mut self.sgss[sgs.0 as usize];
+        let mut dispatches = std::mem::take(&mut self.dispatch_buf);
+        s.try_dispatch_into(now, &mut dispatches);
+        for d in dispatches.drain(..) {
+            let epoch = s.pool.get(d.worker).epoch();
+            if now >= self.opts.warmup {
+                self.metrics.record_qdelay(d.f.dag, d.queue_delay);
+            }
+            if let Some(state) = self.requests.get_mut(&d.req.0) {
+                state.cold_starts += u32::from(d.cold);
+            }
+            q.push_at(
+                d.finish_at,
+                Event::FnComplete {
+                    sgs,
+                    worker: d.worker,
+                    epoch,
+                    req: d.req,
+                    f: d.f,
+                    cold: d.cold,
+                },
+            );
+        }
+        self.dispatch_buf = dispatches;
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_fn_complete(
+        &mut self,
+        q: &mut EventQueue<Event>,
+        sgs: SgsId,
+        worker: WorkerId,
+        epoch: u64,
+        req: RequestId,
+        f: FnId,
+        _cold: bool,
+    ) {
+        let now = q.now();
+        let s = &mut self.sgss[sgs.0 as usize];
+        let current_epoch = s.pool.get(worker).epoch();
+        if current_epoch != epoch || !s.pool.get(worker).is_alive() {
+            // The worker died while this function ran: the execution is
+            // lost; re-enqueue the function (at-least-once semantics).
+            if self.requests.contains_key(&req.0) {
+                let state = &self.requests[&req.0];
+                let queued = self.make_queued(state, req, state.dag, f.idx, now);
+                let target = state.sgs;
+                q.push_at(
+                    now,
+                    Event::SgsEnqueue {
+                        sgs: target,
+                        queued,
+                        is_root: false,
+                    },
+                );
+            }
+            return;
+        }
+        s.complete(worker, f, now);
+
+        // Advance the request's DAG.
+        let mut finished = false;
+        let mut children_ready: Vec<u16> = Vec::new();
+        if let Some(state) = self.requests.get_mut(&req.0) {
+            state.remaining -= 1;
+            finished = state.remaining == 0;
+            let dag = self.registry.get(state.dag);
+            for &c in &dag.children[f.idx as usize] {
+                state.pending_parents[c as usize] -= 1;
+                if state.pending_parents[c as usize] == 0 {
+                    children_ready.push(c);
+                }
+            }
+        }
+        if finished {
+            let state = self.requests.remove(&req.0).expect("finished implies present");
+            if now >= self.opts.warmup {
+                self.metrics.record_completion(&RequestOutcome {
+                    dag: state.dag,
+                    arrival: state.arrival,
+                    completion: now,
+                    deadline_abs: state.deadline_abs,
+                    cold_starts: state.cold_starts,
+                });
+            }
+        } else if !children_ready.is_empty() {
+            let state = &self.requests[&req.0];
+            // Downstream functions run at the same SGS — §4.2: "As an SGS
+            // is DAG aware, it schedules functions once their
+            // dependencies are met."
+            let target = state.sgs;
+            for c in children_ready {
+                let queued = self.make_queued(state, req, state.dag, c, now);
+                q.push_at(
+                    now,
+                    Event::SgsEnqueue {
+                        sgs: target,
+                        queued,
+                        is_root: false,
+                    },
+                );
+            }
+        }
+        // The freed core may admit more queued work.
+        self.dispatch(q, sgs);
+    }
+
+    fn on_setup_done(
+        &mut self,
+        q: &mut EventQueue<Event>,
+        sgs: SgsId,
+        worker: WorkerId,
+        epoch: u64,
+        f: FnId,
+    ) {
+        let s = &mut self.sgss[sgs.0 as usize];
+        if s.pool.get(worker).epoch() != epoch {
+            return; // worker failed mid-setup; sandbox lost
+        }
+        s.setup_done(worker, f);
+        // A fresh warm sandbox can convert a would-be-cold dispatch.
+        self.dispatch(q, sgs);
+    }
+
+    fn on_estimator_tick(&mut self, q: &mut EventQueue<Event>, sgs: SgsId) {
+        let now = q.now();
+        let alive = self.sgss[sgs.0 as usize].is_alive();
+        if alive {
+            let setups = {
+                let s = &mut self.sgss[sgs.0 as usize];
+                s.estimator_tick(now, &self.registry)
+            };
+            self.schedule_setups(q, sgs, &setups);
+            // Piggyback per-DAG reports to the LBS (§5.2.1).
+            let tracked = self.sgss[sgs.0 as usize].estimator.tracked();
+            for dag_id in tracked {
+                let s = &self.sgss[sgs.0 as usize];
+                let dag = self.registry.get(dag_id);
+                let report = SgsReport {
+                    sgs,
+                    sandboxes: s.dag_sandbox_count(dag),
+                    qdelay_us: s.estimator.qdelay(dag_id).unwrap_or(0.0),
+                    window_full: s.estimator.qdelay_window_full(dag_id),
+                };
+                self.lbs.update_report(dag_id, report);
+                if self.opts.record_series {
+                    self.series
+                        .entry(format!("sandboxes.dag{}.sgs{}", dag_id.0, sgs.0))
+                        .or_default()
+                        .push((now, f64::from(report.sandboxes)));
+                    // "ideal" = sandboxes actually needed right now ≈
+                    // concurrently busy ones (Fig 8b reference line)
+                    let busy: u32 = (0..dag.len() as u16)
+                        .map(|i| {
+                            s.pool
+                                .workers
+                                .iter()
+                                .map(|w| {
+                                    w.sandboxes.get(dag.fn_id(i)).map(|x| x.busy).unwrap_or(0)
+                                })
+                                .sum::<u32>()
+                        })
+                        .sum();
+                    self.series
+                        .entry(format!("busy.dag{}.sgs{}", dag_id.0, sgs.0))
+                        .or_default()
+                        .push((now, f64::from(busy)));
+                }
+            }
+        }
+        if self.opts.record_series {
+            let s = &self.sgss[sgs.0 as usize];
+            let busy: u32 = s
+                .pool
+                .workers
+                .iter()
+                .map(|w| w.cores_total() - w.cores_free())
+                .sum();
+            self.series
+                .entry(format!("busy_cores.sgs{}", sgs.0))
+                .or_default()
+                .push((now, f64::from(busy)));
+            self.series
+                .entry(format!("queue_len.sgs{}", sgs.0))
+                .or_default()
+                .push((now, self.sgss[sgs.0 as usize].queue.len() as f64));
+        }
+        q.push_after(
+            self.cfg.sgs.estimate_interval,
+            Event::EstimatorTick { sgs },
+        );
+    }
+
+    fn schedule_setups(&mut self, q: &mut EventQueue<Event>, sgs: SgsId, setups: &[SetupStart]) {
+        for su in setups {
+            let epoch = self.sgss[sgs.0 as usize].pool.get(su.worker).epoch();
+            q.push_at(
+                su.done_at,
+                Event::SetupDone {
+                    sgs,
+                    worker: su.worker,
+                    epoch,
+                    f: su.f,
+                },
+            );
+        }
+    }
+
+    fn on_lbs_control(&mut self, q: &mut EventQueue<Event>) {
+        let now = q.now();
+        let dag_ids: Vec<DagId> = self.registry.iter().map(|d| d.id).collect();
+        for dag_id in dag_ids {
+            let slack = self.registry.get(dag_id).slack();
+            let actions = self.lbs.control_tick(dag_id, slack);
+            for action in actions {
+                match action {
+                    ScaleAction::Out {
+                        dag,
+                        sgs,
+                        prime_target,
+                        expected_rate,
+                    } => {
+                        let setups = self.sgss[sgs.0 as usize].prime_dag(
+                            now,
+                            dag,
+                            prime_target,
+                            expected_rate,
+                            &self.registry,
+                        );
+                        self.schedule_setups(q, sgs, &setups);
+                    }
+                    ScaleAction::In { .. } => {
+                        // Gradual drain: the SGS keeps serving discounted
+                        // lottery traffic; its estimator decays demand.
+                    }
+                    ScaleAction::Drop { dag, sgs } => {
+                        self.sgss[sgs.0 as usize].release_dag(dag, &self.registry);
+                    }
+                    ScaleAction::ResetWindows { dag } => {
+                        let mut members: Vec<SgsId> = self.lbs.active_sgs(dag).to_vec();
+                        members.extend(self.lbs.removed_sgs(dag));
+                        for sgs in members {
+                            self.sgss[sgs.0 as usize]
+                                .estimator
+                                .reset_qdelay_window(dag);
+                        }
+                    }
+                }
+            }
+            if self.opts.record_series {
+                self.series
+                    .entry(format!("active_sgs.dag{}", dag_id.0))
+                    .or_default()
+                    .push((now, self.lbs.active_sgs(dag_id).len() as f64));
+            }
+        }
+        q.push_after(self.cfg.lbs.control_interval, Event::LbsControlTick);
+    }
+
+    fn on_sgs_fail(&mut self, q: &mut EventQueue<Event>, sgs: SgsId) {
+        // Fail-stop the scheduler process. Worker machines are separate;
+        // running functions complete, but the scheduling queue is lost
+        // and recovered by re-routing through the LBS (§6.1: SGS state
+        // lives in the external store; queued work is re-dispatched).
+        let orphaned = self.sgss[sgs.0 as usize].fail();
+        self.lbs.remove_sgs(sgs);
+        for queued in orphaned {
+            let dag = queued.dag;
+            let alt = self.lbs.route(dag);
+            // Requests whose home SGS died move entirely.
+            if let Some(state) = self
+                .requests
+                .values_mut()
+                .find(|r| r.sgs == sgs && r.dag == dag)
+            {
+                state.sgs = alt;
+            }
+            q.push_after(
+                self.cfg.lbs.route_overhead,
+                Event::SgsEnqueue {
+                    sgs: alt,
+                    queued,
+                    is_root: false,
+                },
+            );
+        }
+        // Reassign home SGS for all in-flight requests of the dead SGS.
+        let reassign: Vec<u64> = self
+            .requests
+            .iter()
+            .filter(|(_, r)| r.sgs == sgs)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in reassign {
+            let dag = self.requests[&id].dag;
+            let alt = self.lbs.route(dag);
+            self.requests.get_mut(&id).unwrap().sgs = alt;
+        }
+    }
+
+    /// Whole-platform structural invariants (driven by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for s in &self.sgss {
+            s.check_invariants()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, MS, SEC};
+    use crate::dag::DagSpec;
+    use crate::workload::{App, ArrivalProcess, DagClass};
+
+    fn small_cfg(num_sgs: usize, workers: usize, cores: u32) -> Config {
+        let mut cfg = Config::default();
+        cfg.cluster = ClusterConfig {
+            num_sgs,
+            workers_per_sgs: workers,
+            cores_per_worker: cores,
+            worker_mem_mb: 16 * 1024,
+            proactive_pool_mb: 8 * 1024,
+        };
+        cfg
+    }
+
+    fn one_app(rate: f64) -> Vec<App> {
+        let dag = DagSpec::single(DagId(0), "t", 50 * MS, 200 * MS, 128, 200 * MS);
+        vec![App {
+            class: DagClass::C1,
+            dag,
+            arrivals: ArrivalProcess::constant(rate),
+        }]
+    }
+
+    fn opts(horizon_s: u64) -> SimOptions {
+        SimOptions {
+            seed: 7,
+            horizon: horizon_s * SEC,
+            warmup: SEC,
+            exec_noise_frac: 0.0,
+            record_series: false,
+        }
+    }
+
+    #[test]
+    fn single_dag_completes_requests_and_meets_deadlines() {
+        let mut p = SimPlatform::new(small_cfg(2, 2, 4), one_app(100.0), opts(20));
+        let row = p.run();
+        assert!(row.completed > 1500, "completed {}", row.completed);
+        // steady state: proactive sandboxes make most requests warm
+        assert!(
+            row.deadline_met_rate > 0.98,
+            "met {}",
+            row.deadline_met_rate
+        );
+        // p50 ≈ exec + overheads ≪ deadline
+        assert!(row.p50 < 60 * MS, "p50 {}", row.p50);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn proactive_allocation_reduces_cold_starts_vs_request_count() {
+        let mut p = SimPlatform::new(small_cfg(1, 2, 4), one_app(100.0), opts(20));
+        let row = p.run();
+        let cold_rate = p.total_cold_starts() as f64 / row.completed as f64;
+        assert!(cold_rate < 0.1, "cold rate {cold_rate}");
+    }
+
+    #[test]
+    fn chain_dag_executes_in_order_and_completes() {
+        let dag = DagSpec::chain(
+            DagId(0),
+            "chain",
+            &[(20 * MS, 150 * MS, 128), (30 * MS, 150 * MS, 128)],
+            300 * MS,
+        );
+        let apps = vec![App {
+            class: DagClass::C3,
+            dag,
+            arrivals: ArrivalProcess::constant(50.0),
+        }];
+        let mut p = SimPlatform::new(small_cfg(1, 2, 4), apps, opts(15));
+        let row = p.run();
+        assert!(row.completed > 400);
+        assert!(row.deadline_met_rate > 0.95, "met {}", row.deadline_met_rate);
+        // E2E ≥ sum of execs
+        assert!(row.p50 >= 50 * MS, "p50 {}", row.p50);
+    }
+
+    #[test]
+    fn branched_dag_joins_correctly() {
+        use crate::dag::FunctionSpec;
+        let functions = vec![
+            FunctionSpec::new("root", 10 * MS, 150 * MS, 128),
+            FunctionSpec::new("a", 20 * MS, 150 * MS, 128),
+            FunctionSpec::new("b", 40 * MS, 150 * MS, 128),
+            FunctionSpec::new("join", 10 * MS, 150 * MS, 128),
+        ];
+        let dag = DagSpec::new(
+            DagId(0),
+            "diamond",
+            functions,
+            vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+            400 * MS,
+        )
+        .unwrap();
+        let apps = vec![App {
+            class: DagClass::C4,
+            dag,
+            arrivals: ArrivalProcess::constant(20.0),
+        }];
+        let mut p = SimPlatform::new(small_cfg(1, 2, 8), apps, opts(15));
+        let row = p.run();
+        assert!(row.completed > 150);
+        // E2E ≥ critical path (10+40+10=60ms)
+        assert!(row.p50 >= 60 * MS, "p50 {}", row.p50);
+        assert!(row.deadline_met_rate > 0.9);
+    }
+
+    #[test]
+    fn overload_misses_deadlines() {
+        // 2 cores total, 100 rps × 50ms = 5 cores needed → overload
+        let mut p = SimPlatform::new(small_cfg(1, 1, 2), one_app(100.0), opts(10));
+        let row = p.run();
+        assert!(
+            row.deadline_met_rate < 0.9,
+            "overload must miss deadlines: {}",
+            row.deadline_met_rate
+        );
+    }
+
+    #[test]
+    fn scale_out_happens_under_pressure() {
+        // One SGS pool is too small; queuing delay must trigger scale-out.
+        let mut p = SimPlatform::new(small_cfg(4, 1, 2), one_app(150.0), opts(30));
+        p.run();
+        let dag = DagId(0);
+        assert!(
+            p.lbs().active_sgs(dag).len() > 1 || p.lbs().scale_outs() > 0,
+            "expected scale-out; active={:?}",
+            p.lbs().active_sgs(dag)
+        );
+    }
+
+    #[test]
+    fn no_scale_out_when_single_sgs_suffices() {
+        let mut p = SimPlatform::new(small_cfg(4, 2, 8), one_app(50.0), opts(20));
+        p.run();
+        assert_eq!(p.lbs().active_sgs(DagId(0)).len(), 1);
+        assert_eq!(p.lbs().scale_outs(), 0);
+    }
+
+    #[test]
+    fn worker_failure_recovers() {
+        let mut p = SimPlatform::new(small_cfg(1, 2, 4), one_app(80.0), opts(20));
+        p.inject_worker_failure(5 * SEC, SgsId(0), WorkerId(0));
+        p.inject_worker_recovery(10 * SEC, SgsId(0), WorkerId(0));
+        let row = p.run();
+        assert!(row.completed > 1000, "completed {}", row.completed);
+        // most requests still meet deadlines (capacity halved briefly)
+        assert!(row.deadline_met_rate > 0.7, "met {}", row.deadline_met_rate);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sgs_failure_reroutes() {
+        let mut p = SimPlatform::new(small_cfg(2, 2, 4), one_app(80.0), opts(20));
+        p.inject_sgs_failure(5 * SEC, SgsId(0));
+        let row = p.run();
+        assert!(row.completed > 1000, "completed {}", row.completed);
+        // the surviving SGS carries the load
+        let active = p.lbs().active_sgs(DagId(0));
+        assert!(!active.contains(&SgsId(0)), "dead SGS still active");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut o = opts(10);
+            o.seed = seed;
+            let mut p = SimPlatform::new(small_cfg(2, 2, 4), one_app(100.0), o);
+            let row = p.run();
+            (row.completed, row.p50, row.p99, row.cold_starts)
+        };
+        assert_eq!(run(1), run(1));
+        assert_ne!(run(1), run(2));
+    }
+
+    #[test]
+    fn series_recording() {
+        let mut o = opts(10);
+        o.record_series = true;
+        let mut p = SimPlatform::new(small_cfg(2, 2, 4), one_app(100.0), o);
+        p.run();
+        assert!(p
+            .series
+            .keys()
+            .any(|k| k.starts_with("active_sgs.dag0")));
+        assert!(p.series.keys().any(|k| k.starts_with("sandboxes.dag0")));
+    }
+
+    #[test]
+    fn warmup_excludes_early_completions() {
+        let mut o = opts(10);
+        o.warmup = 9 * SEC;
+        let mut p = SimPlatform::new(small_cfg(1, 2, 4), one_app(100.0), o);
+        let row = p.run();
+        let mut o2 = opts(10);
+        o2.warmup = 0;
+        let mut p2 = SimPlatform::new(small_cfg(1, 2, 4), one_app(100.0), o2);
+        let row2 = p2.run();
+        assert!(row.completed < row2.completed);
+    }
+}

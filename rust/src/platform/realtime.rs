@@ -1,0 +1,403 @@
+//! Real-time serving mode: threads + real PJRT execution on the request
+//! path (the `serve` subcommand and the `ml_serving` example).
+//!
+//! This is the wall-clock twin of the simulated platform: the same SRSF
+//! ordering applies, dispatch is sandbox-aware, and a *cold start* is
+//! real work — the worker thread parses the artifact's HLO text and
+//! compiles it on its own PJRT client (the xla crate's handles are not
+//! `Send`, which conveniently mirrors the paper's per-machine sandboxes:
+//! an executable compiled on worker A cannot serve worker B). A *warm*
+//! hit reuses the worker's cached executable and costs only the
+//! inference.
+//!
+//! Python never appears here: workers read `artifacts/*.hlo.txt` written
+//! at build time.
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::config::SchedPolicy;
+use crate::runtime::{Manifest, RuntimeError, Tensor};
+
+/// A serving request: run `artifact` on `input`.
+pub struct Job {
+    pub artifact: String,
+    pub input: Vec<f32>,
+    /// Relative deadline in µs (drives SRSF ordering).
+    pub deadline_us: u64,
+    pub reply: Sender<Completion>,
+    submitted: Instant,
+}
+
+/// Completion record returned to the caller.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub artifact: String,
+    pub worker: usize,
+    pub cold: bool,
+    /// Queue wait before a worker picked the job up.
+    pub queue_us: u64,
+    /// Cold-start (HLO parse + PJRT compile) time, 0 when warm.
+    pub setup_us: u64,
+    /// Pure inference time.
+    pub exec_us: u64,
+    /// End-to-end: submit → reply.
+    pub e2e_us: u64,
+    pub outputs: Vec<Tensor>,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    /// (srsf key, seq, job)
+    jobs: Vec<(i64, u64, Job)>,
+    seq: u64,
+    policy: SchedPolicy,
+    /// Which artifacts each worker has compiled (warm sets).
+    warm: Vec<HashSet<String>>,
+    /// Which workers are currently waiting for work.
+    idle: Vec<bool>,
+    shutdown: bool,
+}
+
+impl QueueState {
+    /// Pick the job this worker should run: warm-here first, then SRSF
+    /// key, then arrival order (sandbox-aware dispatch). A job that is
+    /// warm on some *other idle* worker is left for that worker — the
+    /// real-time analogue of routing to the proactive sandbox — unless
+    /// this worker is also warm for it.
+    fn take_for(&mut self, worker: usize) -> Option<Job> {
+        if self.jobs.is_empty() {
+            return None;
+        }
+        let warm_here = &self.warm[worker];
+        let mut best: Option<(bool, i64, u64, usize)> = None;
+        for (i, (key, seq, job)) in self.jobs.iter().enumerate() {
+            let is_warm = warm_here.contains(&job.artifact);
+            if !is_warm {
+                let better_host_idle = self.idle.iter().enumerate().any(|(w, idle)| {
+                    *idle && w != worker && self.warm[w].contains(&job.artifact)
+                });
+                if better_host_idle {
+                    continue; // leave it for the warm worker
+                }
+            }
+            let cand = (!is_warm, *key, *seq);
+            let better = match best {
+                None => true,
+                Some((w, k, s, _)) => cand < (w, k, s),
+            };
+            if better {
+                best = Some((cand.0, cand.1, cand.2, i));
+            }
+        }
+        let (_, _, _, idx) = best?;
+        Some(self.jobs.swap_remove(idx).2)
+    }
+}
+
+/// The real-time server.
+pub struct Server {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub manifest: Manifest,
+}
+
+impl Server {
+    /// Start `workers` worker threads serving the given artifact dir.
+    /// `prewarm` artifacts are compiled on every worker before the
+    /// server accepts jobs (proactive allocation's real-time analogue).
+    pub fn start(
+        artifact_dir: &std::path::Path,
+        workers: usize,
+        policy: SchedPolicy,
+        prewarm: &[&str],
+    ) -> Result<Server, RuntimeError> {
+        assert!(workers > 0);
+        let manifest = Manifest::load(artifact_dir)?;
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState {
+                jobs: Vec::new(),
+                seq: 0,
+                policy,
+                warm: vec![HashSet::new(); workers],
+                idle: vec![true; workers],
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let shared = Arc::clone(&shared);
+            let dir: PathBuf = artifact_dir.to_path_buf();
+            let manifest = manifest.clone();
+            let prewarm: Vec<String> = prewarm.iter().map(|s| s.to_string()).collect();
+            let ready = ready_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_main(w, shared, dir, manifest, prewarm, ready);
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..workers {
+            ready_rx
+                .recv()
+                .map_err(|e| RuntimeError::Xla(format!("worker start: {e}")))?
+                .map_err(RuntimeError::Xla)?;
+        }
+        Ok(Server {
+            shared,
+            handles,
+            manifest,
+        })
+    }
+
+    /// Submit a job; the completion arrives on the returned receiver.
+    pub fn submit(
+        &self,
+        artifact: &str,
+        input: Vec<f32>,
+        deadline_us: u64,
+    ) -> Receiver<Completion> {
+        let (tx, rx) = channel();
+        let job = Job {
+            artifact: artifact.to_string(),
+            input,
+            deadline_us,
+            reply: tx,
+            submitted: Instant::now(),
+        };
+        let mut q = self.shared.queue.lock().unwrap();
+        let seq = q.seq;
+        q.seq += 1;
+        let key = match q.policy {
+            // SRSF over relative deadlines: tighter deadline = smaller
+            // key = dispatched first among queued jobs.
+            SchedPolicy::Srsf => job.deadline_us as i64,
+            SchedPolicy::Fifo => seq as i64,
+        };
+        q.jobs.push((key, seq, job));
+        drop(q);
+        self.shared.cv.notify_all();
+        rx
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Current warm-set sizes per worker (observability).
+    pub fn warm_counts(&self) -> Vec<usize> {
+        let q = self.shared.queue.lock().unwrap();
+        q.warm.iter().map(|s| s.len()).collect()
+    }
+}
+
+fn worker_main(
+    id: usize,
+    shared: Arc<Shared>,
+    dir: PathBuf,
+    manifest: Manifest,
+    prewarm: Vec<String>,
+    ready: Sender<Result<(), String>>,
+) {
+    // Each worker owns its own PJRT client + executable cache — the
+    // "sandboxes" of this machine.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = ready.send(Err(format!("worker {id}: pjrt: {e}")));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    for name in &prewarm {
+        match compile_artifact(&client, &dir, &manifest, name) {
+            Ok(exe) => {
+                cache.insert(name.clone(), exe);
+            }
+            Err(e) => {
+                let _ = ready.send(Err(format!("worker {id}: prewarm {name}: {e}")));
+                return;
+            }
+        }
+    }
+    {
+        let mut q = shared.queue.lock().unwrap();
+        for name in cache.keys() {
+            q.warm[id].insert(name.clone());
+        }
+    }
+    let _ = ready.send(Ok(()));
+
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if q.shutdown {
+                    return;
+                }
+                if let Some(job) = q.take_for(id) {
+                    q.idle[id] = false;
+                    break job;
+                }
+                q.idle[id] = true;
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        let queue_us = job.submitted.elapsed().as_micros() as u64;
+
+        // Cold start: parse + compile the artifact on this worker.
+        let mut setup_us = 0;
+        let cold = !cache.contains_key(&job.artifact);
+        if cold {
+            let t0 = Instant::now();
+            match compile_artifact(&client, &dir, &manifest, &job.artifact) {
+                Ok(exe) => {
+                    cache.insert(job.artifact.clone(), exe);
+                    setup_us = t0.elapsed().as_micros() as u64;
+                }
+                Err(_) => {
+                    continue; // drop job; caller sees a closed channel
+                }
+            }
+        }
+
+        // Execute.
+        let entry = manifest.entry(&job.artifact).expect("compiled implies known");
+        let dims: Vec<i64> = entry.input_shape.iter().map(|&d| d as i64).collect();
+        let t0 = Instant::now();
+        let outputs = (|| -> Result<Vec<Tensor>, RuntimeError> {
+            let lit = xla::Literal::vec1(job.input.as_slice()).reshape(&dims)?;
+            let exe = cache.get(&job.artifact).expect("just ensured");
+            let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            let mut out = Vec::with_capacity(parts.len());
+            for p in parts {
+                out.push(match p.element_type()? {
+                    xla::ElementType::F32 => Tensor::F32(p.to_vec::<f32>()?),
+                    xla::ElementType::S32 => Tensor::I32(p.to_vec::<i32>()?),
+                    xla::ElementType::S64 => Tensor::I64(p.to_vec::<i64>()?),
+                    other => {
+                        return Err(RuntimeError::Xla(format!("output type {other:?}")))
+                    }
+                });
+            }
+            Ok(out)
+        })();
+        let exec_us = t0.elapsed().as_micros() as u64;
+
+        {
+            let mut q = shared.queue.lock().unwrap();
+            q.warm[id].insert(job.artifact.clone());
+            q.idle[id] = true;
+        }
+        shared.cv.notify_all();
+
+        if let Ok(outputs) = outputs {
+            let _ = job.reply.send(Completion {
+                artifact: job.artifact,
+                worker: id,
+                cold,
+                queue_us,
+                setup_us,
+                exec_us,
+                e2e_us: job.submitted.elapsed().as_micros() as u64,
+                outputs,
+            });
+        }
+    }
+}
+
+fn compile_artifact(
+    client: &xla::PjRtClient,
+    dir: &std::path::Path,
+    manifest: &Manifest,
+    name: &str,
+) -> Result<xla::PjRtLoadedExecutable, RuntimeError> {
+    let entry = manifest
+        .entry(name)
+        .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+    let path = dir.join(&entry.file);
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| RuntimeError::Manifest("non-utf8 path".into()))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn serve_warm_and_cold_jobs() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let server = Server::start(&dir, 2, SchedPolicy::Srsf, &["mlp_infer_b1"]).unwrap();
+        // warm path
+        let input: Vec<f32> = (0..256).map(|i| (i as f32 * 0.03).cos()).collect();
+        let rx = server.submit("mlp_infer_b1", input.clone(), 100_000);
+        let c = rx.recv().unwrap();
+        assert!(!c.cold, "prewarmed artifact must be warm");
+        assert_eq!(c.setup_us, 0);
+        let probs = c.outputs[0].as_f32().unwrap();
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        // cold path: anomaly_score not prewarmed
+        let input2: Vec<f32> = (0..128).map(|i| i as f32 * 0.05).collect();
+        let rx2 = server.submit("anomaly_score_b1", input2, 500_000);
+        let c2 = rx2.recv().unwrap();
+        assert!(c2.cold);
+        assert!(c2.setup_us > 0, "cold start must cost compile time");
+        // second hit is warm: sandbox-aware dispatch reuses that worker
+        let input3: Vec<f32> = (0..128).map(|i| i as f32 * 0.05).collect();
+        let rx3 = server.submit("anomaly_score_b1", input3, 500_000);
+        let c3 = rx3.recv().unwrap();
+        assert!(!c3.cold, "sandbox-aware routing should reuse the warm worker");
+        server.shutdown();
+    }
+
+    #[test]
+    fn throughput_over_batch_of_requests() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let server = Server::start(&dir, 2, SchedPolicy::Srsf, &["mlp_infer_b1"]).unwrap();
+        let input: Vec<f32> = vec![0.25; 256];
+        let rxs: Vec<_> = (0..50)
+            .map(|_| server.submit("mlp_infer_b1", input.clone(), 100_000))
+            .collect();
+        let mut cold = 0;
+        for rx in rxs {
+            let c = rx.recv().unwrap();
+            if c.cold {
+                cold += 1;
+            }
+            assert_eq!(c.outputs[0].as_f32().unwrap().len(), 10);
+        }
+        assert_eq!(cold, 0, "all prewarmed");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,437 @@
+//! PJRT runtime: load and execute the AOT-compiled function bodies.
+//!
+//! The build path is: Pallas kernels (L1) → JAX models (L2) →
+//! `python/compile/aot.py` → `artifacts/*.hlo.txt` + `manifest.json`.
+//! This module is the request-path half: it parses the manifest, loads
+//! each HLO-text module, compiles it once on the PJRT CPU client, and
+//! executes it with concrete inputs — no Python anywhere.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// One compiled artifact's metadata (a row of `manifest.json`).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub model: String,
+    pub batch: usize,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    /// "f32" or "i32".
+    pub input_dtype: String,
+    pub output_shapes: Vec<Vec<usize>>,
+    pub flops: u64,
+    /// Structural L1 perf estimates (DESIGN.md §Perf).
+    pub vmem_bytes: u64,
+    pub mxu_utilization: f64,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub weight_seed: u64,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("manifest: {0}")]
+    Manifest(String),
+    #[error("unknown artifact '{0}'")]
+    UnknownArtifact(String),
+    #[error("input shape mismatch for '{name}': expected {expected} elements, got {got}")]
+    InputShape {
+        name: String,
+        expected: usize,
+        got: usize,
+    },
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, RuntimeError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = json::parse(&text).map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        Self::from_json(dir, &v)
+    }
+
+    pub fn from_json(dir: &Path, v: &Json) -> Result<Manifest, RuntimeError> {
+        let merr = RuntimeError::Manifest;
+        let entries_json = v
+            .req("entries")
+            .map_err(merr)?
+            .as_arr()
+            .ok_or_else(|| RuntimeError::Manifest("'entries' must be an array".into()))?;
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for e in entries_json {
+            let shape = |key: &str| -> Result<Vec<usize>, RuntimeError> {
+                e.req(key)
+                    .map_err(merr)?
+                    .as_arr()
+                    .ok_or_else(|| RuntimeError::Manifest(format!("'{key}' must be an array")))?
+                    .iter()
+                    .map(|d| {
+                        d.as_u64()
+                            .map(|x| x as usize)
+                            .ok_or_else(|| RuntimeError::Manifest(format!("bad dim in {key}")))
+                    })
+                    .collect()
+            };
+            let output_shapes = e
+                .req("output_shapes")
+                .map_err(merr)?
+                .as_arr()
+                .ok_or_else(|| RuntimeError::Manifest("'output_shapes' must be an array".into()))?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .ok_or_else(|| RuntimeError::Manifest("bad output shape".into()))?
+                        .iter()
+                        .map(|d| {
+                            d.as_u64()
+                                .map(|x| x as usize)
+                                .ok_or_else(|| RuntimeError::Manifest("bad output dim".into()))
+                        })
+                        .collect()
+                })
+                .collect::<Result<Vec<Vec<usize>>, _>>()?;
+            entries.push(ArtifactEntry {
+                name: e.req_str("name").map_err(merr)?.to_string(),
+                model: e.req_str("model").map_err(merr)?.to_string(),
+                batch: e.req_u64("batch").map_err(merr)? as usize,
+                file: e.req_str("file").map_err(merr)?.to_string(),
+                input_shape: shape("input_shape")?,
+                input_dtype: e.req_str("input_dtype").map_err(merr)?.to_string(),
+                output_shapes,
+                flops: e.req_u64("flops").map_err(merr)?,
+                vmem_bytes: e.req_u64("vmem_bytes").unwrap_or(0),
+                mxu_utilization: e.req_f64("mxu_utilization").unwrap_or(0.0),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            weight_seed: v.req_u64("weight_seed").unwrap_or(0),
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Best artifact of `model` covering a batch of `n` (smallest batch
+    /// ≥ n, else the largest available) — the dynamic batcher's lookup.
+    pub fn pick_batch(&self, model: &str, n: usize) -> Option<&ArtifactEntry> {
+        let mut of_model: Vec<&ArtifactEntry> =
+            self.entries.iter().filter(|e| e.model == model).collect();
+        of_model.sort_by_key(|e| e.batch);
+        of_model
+            .iter()
+            .find(|e| e.batch >= n)
+            .copied()
+            .or_else(|| of_model.last().copied())
+    }
+}
+
+/// Output of one artifact execution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl Tensor {
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+            Tensor::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Typed input accepted by [`Runtime::execute`].
+#[derive(Debug, Clone)]
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl Input<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Input::F32(v) => v.len(),
+            Input::I32(v) => v.len(),
+        }
+    }
+}
+
+struct Loaded {
+    entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client + compiled executables by name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    loaded: HashMap<String, Loaded>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over the artifacts in `dir`, compiling
+    /// every manifest entry (one executable per model×batch variant).
+    pub fn load_dir(dir: &Path) -> Result<Runtime, RuntimeError> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut rt = Runtime {
+            client,
+            loaded: HashMap::new(),
+            manifest: manifest.clone(),
+        };
+        for entry in &manifest.entries {
+            rt.load_entry(entry)?;
+        }
+        Ok(rt)
+    }
+
+    /// Create a runtime compiling only the named artifacts (faster start).
+    pub fn load_subset(dir: &Path, names: &[&str]) -> Result<Runtime, RuntimeError> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut rt = Runtime {
+            client,
+            loaded: HashMap::new(),
+            manifest: manifest.clone(),
+        };
+        for name in names {
+            let entry = manifest
+                .entry(name)
+                .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?
+                .clone();
+            rt.load_entry(&entry)?;
+        }
+        Ok(rt)
+    }
+
+    fn load_entry(&mut self, entry: &ArtifactEntry) -> Result<(), RuntimeError> {
+        let path = self.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| RuntimeError::Manifest("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.loaded.insert(
+            entry.name.clone(),
+            Loaded {
+                entry: entry.clone(),
+                exe,
+            },
+        );
+        Ok(())
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.loaded.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Execute artifact `name` with a flat input buffer (row-major over
+    /// the manifest's input shape). Returns the tuple of outputs.
+    pub fn execute(&self, name: &str, input: Input<'_>) -> Result<Vec<Tensor>, RuntimeError> {
+        let loaded = self
+            .loaded
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
+        let expected: usize = loaded.entry.input_shape.iter().product();
+        if input.len() != expected {
+            return Err(RuntimeError::InputShape {
+                name: name.to_string(),
+                expected,
+                got: input.len(),
+            });
+        }
+        let dims: Vec<i64> = loaded.entry.input_shape.iter().map(|&d| d as i64).collect();
+        let literal = match input {
+            Input::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            Input::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+        };
+        let result = loaded.exe.execute::<xla::Literal>(&[literal])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            let ty = p.element_type()?;
+            out.push(match ty {
+                xla::ElementType::F32 => Tensor::F32(p.to_vec::<f32>()?),
+                xla::ElementType::S32 => Tensor::I32(p.to_vec::<i32>()?),
+                xla::ElementType::S64 => Tensor::I64(p.to_vec::<i64>()?),
+                other => {
+                    return Err(RuntimeError::Xla(format!(
+                        "unsupported output element type {other:?}"
+                    )))
+                }
+            });
+        }
+        Ok(out)
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.loaded.get(name).map(|l| &l.entry)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entries.len() >= 9);
+        let e = m.entry("mlp_infer_b1").unwrap();
+        assert_eq!(e.input_shape, vec![1, 256]);
+        assert_eq!(e.input_dtype, "f32");
+        assert_eq!(e.output_shapes[0], vec![1, 10]);
+        assert!(e.flops > 0);
+    }
+
+    #[test]
+    fn pick_batch_selects_covering_variant() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.pick_batch("mlp_infer", 1).unwrap().batch, 1);
+        assert_eq!(m.pick_batch("mlp_infer", 3).unwrap().batch, 4);
+        assert_eq!(m.pick_batch("mlp_infer", 9).unwrap().batch, 16);
+        // beyond the largest: take the largest
+        assert_eq!(m.pick_batch("mlp_infer", 99).unwrap().batch, 16);
+        assert!(m.pick_batch("nope", 1).is_none());
+    }
+
+    #[test]
+    fn execute_mlp_infer_probs_sum_to_one() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::load_subset(&dir, &["mlp_infer_b4"]).unwrap();
+        let input: Vec<f32> = (0..4 * 256).map(|i| (i as f32 * 0.01).sin()).collect();
+        let out = rt.execute("mlp_infer_b4", Input::F32(&input)).unwrap();
+        assert_eq!(out.len(), 2, "probs + argmax");
+        let probs = out[0].as_f32().unwrap();
+        assert_eq!(probs.len(), 4 * 10);
+        for row in probs.chunks(10) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row sum {s}");
+            assert!(row.iter().all(|p| *p >= 0.0));
+        }
+        // argmax consistent with probs
+        match &out[1] {
+            Tensor::I32(preds) => {
+                for (b, row) in probs.chunks(10).enumerate() {
+                    let am = row
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    assert_eq!(preds[b] as usize, am);
+                }
+            }
+            Tensor::I64(preds) => {
+                assert_eq!(preds.len(), 4);
+            }
+            other => panic!("unexpected argmax type {other:?}"),
+        }
+    }
+
+    #[test]
+    fn execute_is_deterministic() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::load_subset(&dir, &["anomaly_score_b1"]).unwrap();
+        let input: Vec<f32> = (0..128).map(|i| i as f32 * 0.1).collect();
+        let a = rt.execute("anomaly_score_b1", Input::F32(&input)).unwrap();
+        let b = rt.execute("anomaly_score_b1", Input::F32(&input)).unwrap();
+        assert_eq!(a, b);
+        let score = a[0].as_f32().unwrap()[0];
+        assert!(score > 0.0 && score < 1.0, "sigmoid range: {score}");
+    }
+
+    #[test]
+    fn execute_i32_text_featurize() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::load_subset(&dir, &["text_featurize_b1"]).unwrap();
+        let tokens: Vec<i32> = (0..32).map(|i| i % 128).collect();
+        let out = rt.execute("text_featurize_b1", Input::I32(&tokens)).unwrap();
+        let feat = out[0].as_f32().unwrap();
+        assert_eq!(feat.len(), 64);
+        assert!(feat.iter().all(|x| x.abs() <= 1.0), "tanh range");
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::load_subset(&dir, &["mlp_infer_b1"]).unwrap();
+        let bad = vec![0f32; 7];
+        assert!(matches!(
+            rt.execute("mlp_infer_b1", Input::F32(&bad)),
+            Err(RuntimeError::InputShape { .. })
+        ));
+        assert!(matches!(
+            rt.execute("missing", Input::F32(&bad)),
+            Err(RuntimeError::UnknownArtifact(_))
+        ));
+    }
+}

@@ -1,0 +1,391 @@
+//! Sandbox lifecycle + per-worker sandbox accounting (§4.3, Fig 4c).
+//!
+//! A sandbox passes through: **setting-up** (container launch + runtime +
+//! code fetch; 125–400 ms) → **warm-idle** (ready, schedulable) ⇄ **busy**
+//! (running a request) → warm-idle, with two eviction stages: **soft**
+//! (excluded from scheduling, still memory-resident, revivable for free —
+//! §4.3.3) and **hard** (memory released). Proactively allocated
+//! sandboxes are *soft state*: they only consume memory from a fixed-size
+//! per-worker pool and can be dropped without correctness impact.
+//!
+//! [`SandboxTable`] tracks one worker's sandboxes as per-function counts —
+//! sandboxes of the same function are fungible, so counts (not objects)
+//! keep the hot path allocation-free.
+
+use crate::util::fasthash::FastMap;
+
+use crate::config::Micros;
+use crate::dag::FnId;
+
+/// Per-function sandbox counts on one worker.
+#[derive(Debug, Clone, Default)]
+pub struct SandboxSet {
+    /// Memory per sandbox of this function (MB).
+    pub mem_mb: u64,
+    /// Being set up (proactive allocation in flight).
+    pub setting_up: u32,
+    /// Warm and idle — schedulable.
+    pub warm_idle: u32,
+    /// Currently executing a request.
+    pub busy: u32,
+    /// Soft-evicted: memory-resident, not schedulable, free to revive.
+    pub soft: u32,
+    /// Virtual time of last use (LRU eviction ablation).
+    pub last_used: Micros,
+}
+
+impl SandboxSet {
+    /// Sandboxes that count against the demand target (schedulable or
+    /// about to be): setting_up + warm + busy.
+    pub fn active(&self) -> u32 {
+        self.setting_up + self.warm_idle + self.busy
+    }
+
+    /// Everything occupying pool memory.
+    pub fn resident(&self) -> u32 {
+        self.active() + self.soft
+    }
+
+    pub fn mem_used_mb(&self) -> u64 {
+        self.resident() as u64 * self.mem_mb
+    }
+}
+
+/// Errors from sandbox-table operations — these indicate caller bugs in
+/// the scheduler, so they're loud.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SandboxError {
+    #[error("no warm sandbox of {0:?} to acquire")]
+    NoWarm(FnId),
+    #[error("no sandbox of {0:?} in state {1}")]
+    NoneInState(FnId, &'static str),
+    #[error("pool exhausted: need {need} MB, free {free} MB")]
+    PoolExhausted { need: u64, free: u64 },
+}
+
+/// One worker's sandbox table + proactive memory pool accounting.
+#[derive(Debug, Clone)]
+pub struct SandboxTable {
+    pool_total_mb: u64,
+    pool_used_mb: u64,
+    sets: FastMap<FnId, SandboxSet>,
+}
+
+impl SandboxTable {
+    pub fn new(pool_total_mb: u64) -> Self {
+        SandboxTable {
+            pool_total_mb,
+            pool_used_mb: 0,
+            sets: FastMap::default(),
+        }
+    }
+
+    pub fn pool_free_mb(&self) -> u64 {
+        self.pool_total_mb - self.pool_used_mb
+    }
+
+    pub fn pool_used_mb(&self) -> u64 {
+        self.pool_used_mb
+    }
+
+    pub fn pool_total_mb(&self) -> u64 {
+        self.pool_total_mb
+    }
+
+    pub fn get(&self, f: FnId) -> Option<&SandboxSet> {
+        self.sets.get(&f)
+    }
+
+    /// Active (schedulable-or-pending) count for a function.
+    pub fn active(&self, f: FnId) -> u32 {
+        self.sets.get(&f).map(|s| s.active()).unwrap_or(0)
+    }
+
+    pub fn warm_idle(&self, f: FnId) -> u32 {
+        self.sets.get(&f).map(|s| s.warm_idle).unwrap_or(0)
+    }
+
+    pub fn soft(&self, f: FnId) -> u32 {
+        self.sets.get(&f).map(|s| s.soft).unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&FnId, &SandboxSet)> {
+        self.sets.iter()
+    }
+
+    fn entry(&mut self, f: FnId, mem_mb: u64) -> &mut SandboxSet {
+        let e = self.sets.entry(f).or_default();
+        e.mem_mb = mem_mb;
+        e
+    }
+
+    /// Can a new sandbox of `mem_mb` be created without eviction?
+    pub fn has_pool_mem(&self, mem_mb: u64) -> bool {
+        self.pool_free_mb() >= mem_mb
+    }
+
+    /// Start proactive setup of one sandbox (caller adds the setup-time
+    /// event and later calls [`finish_setup`](Self::finish_setup)).
+    pub fn begin_setup(&mut self, f: FnId, mem_mb: u64) -> Result<(), SandboxError> {
+        if !self.has_pool_mem(mem_mb) {
+            return Err(SandboxError::PoolExhausted {
+                need: mem_mb,
+                free: self.pool_free_mb(),
+            });
+        }
+        self.pool_used_mb += mem_mb;
+        self.entry(f, mem_mb).setting_up += 1;
+        Ok(())
+    }
+
+    /// Setup finished: sandbox becomes warm.
+    pub fn finish_setup(&mut self, f: FnId) -> Result<(), SandboxError> {
+        let s = self
+            .sets
+            .get_mut(&f)
+            .filter(|s| s.setting_up > 0)
+            .ok_or(SandboxError::NoneInState(f, "setting_up"))?;
+        s.setting_up -= 1;
+        s.warm_idle += 1;
+        Ok(())
+    }
+
+    /// Claim a warm sandbox for execution.
+    pub fn acquire_warm(&mut self, f: FnId, now: Micros) -> Result<(), SandboxError> {
+        let s = self
+            .sets
+            .get_mut(&f)
+            .filter(|s| s.warm_idle > 0)
+            .ok_or(SandboxError::NoWarm(f))?;
+        s.warm_idle -= 1;
+        s.busy += 1;
+        s.last_used = now;
+        Ok(())
+    }
+
+    /// Reactive (cold) allocation straight into busy: the request pays
+    /// the setup time, modeled by the caller. Takes pool memory.
+    pub fn acquire_cold(&mut self, f: FnId, mem_mb: u64, now: Micros) -> Result<(), SandboxError> {
+        if !self.has_pool_mem(mem_mb) {
+            return Err(SandboxError::PoolExhausted {
+                need: mem_mb,
+                free: self.pool_free_mb(),
+            });
+        }
+        self.pool_used_mb += mem_mb;
+        let s = self.entry(f, mem_mb);
+        s.busy += 1;
+        s.last_used = now;
+        Ok(())
+    }
+
+    /// Execution finished: busy → warm-idle (sandboxes are reused).
+    pub fn release(&mut self, f: FnId, now: Micros) -> Result<(), SandboxError> {
+        let s = self
+            .sets
+            .get_mut(&f)
+            .filter(|s| s.busy > 0)
+            .ok_or(SandboxError::NoneInState(f, "busy"))?;
+        s.busy -= 1;
+        s.warm_idle += 1;
+        s.last_used = now;
+        Ok(())
+    }
+
+    /// Soft-evict one warm sandbox (demand decreased; §4.3.3).
+    pub fn soft_evict_one(&mut self, f: FnId) -> Result<(), SandboxError> {
+        let s = self
+            .sets
+            .get_mut(&f)
+            .filter(|s| s.warm_idle > 0)
+            .ok_or(SandboxError::NoneInState(f, "warm_idle"))?;
+        s.warm_idle -= 1;
+        s.soft += 1;
+        Ok(())
+    }
+
+    /// Revive a soft-evicted sandbox — free, no overhead (§4.3.3).
+    pub fn soft_revive_one(&mut self, f: FnId) -> Result<(), SandboxError> {
+        let s = self
+            .sets
+            .get_mut(&f)
+            .filter(|s| s.soft > 0)
+            .ok_or(SandboxError::NoneInState(f, "soft"))?;
+        s.soft -= 1;
+        s.warm_idle += 1;
+        Ok(())
+    }
+
+    /// Hard-evict one sandbox of `f`, preferring soft-evicted ones, then
+    /// warm-idle. Busy / setting-up sandboxes are never evicted.
+    /// Releases pool memory.
+    pub fn hard_evict_one(&mut self, f: FnId) -> Result<u64, SandboxError> {
+        let s = self
+            .sets
+            .get_mut(&f)
+            .ok_or(SandboxError::NoneInState(f, "any"))?;
+        if s.soft > 0 {
+            s.soft -= 1;
+        } else if s.warm_idle > 0 {
+            s.warm_idle -= 1;
+        } else {
+            return Err(SandboxError::NoneInState(f, "evictable"));
+        }
+        let mem = s.mem_mb;
+        self.pool_used_mb -= mem;
+        if s.resident() == 0 {
+            self.sets.remove(&f);
+        }
+        Ok(mem)
+    }
+
+    /// Candidates for hard eviction: (fn, evictable_count, mem_mb,
+    /// last_used, soft_count). Used by the eviction policies.
+    pub fn evictable(&self) -> impl Iterator<Item = (FnId, u32, u64, Micros, u32)> + '_ {
+        self.sets.iter().filter_map(|(f, s)| {
+            let evictable = s.soft + s.warm_idle;
+            (evictable > 0).then_some((*f, evictable, s.mem_mb, s.last_used, s.soft))
+        })
+    }
+
+    /// Accounting invariant: pool_used equals the sum of resident
+    /// sandbox memory. Property tests drive this.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let sum: u64 = self.sets.values().map(|s| s.mem_used_mb()).sum();
+        if sum != self.pool_used_mb {
+            return Err(format!(
+                "pool accounting drift: sum {sum} != used {}",
+                self.pool_used_mb
+            ));
+        }
+        if self.pool_used_mb > self.pool_total_mb {
+            return Err(format!(
+                "pool overcommitted: {} > {}",
+                self.pool_used_mb, self.pool_total_mb
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::DagId;
+
+    fn fid(i: u16) -> FnId {
+        FnId {
+            dag: DagId(0),
+            idx: i,
+        }
+    }
+
+    #[test]
+    fn lifecycle_setup_warm_busy_release() {
+        let mut t = SandboxTable::new(1024);
+        t.begin_setup(fid(0), 128).unwrap();
+        assert_eq!(t.pool_used_mb(), 128);
+        assert_eq!(t.active(fid(0)), 1);
+        assert_eq!(t.warm_idle(fid(0)), 0);
+        t.finish_setup(fid(0)).unwrap();
+        assert_eq!(t.warm_idle(fid(0)), 1);
+        t.acquire_warm(fid(0), 100).unwrap();
+        assert_eq!(t.warm_idle(fid(0)), 0);
+        assert_eq!(t.get(fid(0)).unwrap().busy, 1);
+        t.release(fid(0), 200).unwrap();
+        assert_eq!(t.warm_idle(fid(0)), 1);
+        assert_eq!(t.get(fid(0)).unwrap().last_used, 200);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cold_acquire_counts_memory() {
+        let mut t = SandboxTable::new(256);
+        t.acquire_cold(fid(1), 128, 5).unwrap();
+        assert_eq!(t.pool_used_mb(), 128);
+        assert_eq!(t.active(fid(1)), 1);
+        t.release(fid(1), 10).unwrap();
+        assert_eq!(t.warm_idle(fid(1)), 1);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pool_exhaustion() {
+        let mut t = SandboxTable::new(200);
+        t.begin_setup(fid(0), 128).unwrap();
+        assert_eq!(
+            t.begin_setup(fid(1), 128).unwrap_err(),
+            SandboxError::PoolExhausted { need: 128, free: 72 }
+        );
+        assert!(!t.has_pool_mem(128));
+        assert!(t.has_pool_mem(72));
+    }
+
+    #[test]
+    fn soft_evict_revive_roundtrip_free() {
+        let mut t = SandboxTable::new(1024);
+        t.begin_setup(fid(0), 128).unwrap();
+        t.finish_setup(fid(0)).unwrap();
+        t.soft_evict_one(fid(0)).unwrap();
+        assert_eq!(t.warm_idle(fid(0)), 0);
+        assert_eq!(t.soft(fid(0)), 1);
+        // memory still held
+        assert_eq!(t.pool_used_mb(), 128);
+        t.soft_revive_one(fid(0)).unwrap();
+        assert_eq!(t.warm_idle(fid(0)), 1);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn hard_evict_prefers_soft_and_frees_memory() {
+        let mut t = SandboxTable::new(1024);
+        for _ in 0..2 {
+            t.begin_setup(fid(0), 128).unwrap();
+            t.finish_setup(fid(0)).unwrap();
+        }
+        t.soft_evict_one(fid(0)).unwrap();
+        assert_eq!((t.warm_idle(fid(0)), t.soft(fid(0))), (1, 1));
+        let freed = t.hard_evict_one(fid(0)).unwrap();
+        assert_eq!(freed, 128);
+        // the soft one went first
+        assert_eq!((t.warm_idle(fid(0)), t.soft(fid(0))), (1, 0));
+        assert_eq!(t.pool_used_mb(), 128);
+        t.hard_evict_one(fid(0)).unwrap();
+        assert_eq!(t.pool_used_mb(), 0);
+        assert!(t.get(fid(0)).is_none(), "empty set is removed");
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn busy_sandboxes_not_evictable() {
+        let mut t = SandboxTable::new(1024);
+        t.acquire_cold(fid(0), 128, 0).unwrap();
+        assert_eq!(
+            t.hard_evict_one(fid(0)).unwrap_err(),
+            SandboxError::NoneInState(fid(0), "evictable")
+        );
+        assert_eq!(t.evictable().count(), 0);
+    }
+
+    #[test]
+    fn error_paths() {
+        let mut t = SandboxTable::new(1024);
+        assert!(t.acquire_warm(fid(0), 0).is_err());
+        assert!(t.release(fid(0), 0).is_err());
+        assert!(t.finish_setup(fid(0)).is_err());
+        assert!(t.soft_evict_one(fid(0)).is_err());
+        assert!(t.soft_revive_one(fid(0)).is_err());
+    }
+
+    #[test]
+    fn evictable_listing() {
+        let mut t = SandboxTable::new(1024);
+        t.begin_setup(fid(0), 128).unwrap();
+        t.finish_setup(fid(0)).unwrap();
+        t.begin_setup(fid(1), 64).unwrap(); // still setting up
+        let ev: Vec<_> = t.evictable().collect();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].0, fid(0));
+        assert_eq!(ev[0].1, 1);
+    }
+}

@@ -1,0 +1,312 @@
+//! Sandbox demand estimation (§4.3.1, Fig 5).
+//!
+//! Per DAG, the SGS records the request arrival count over each 100 ms
+//! interval, smooths the measured rate with an EWMA, models arrivals in
+//! the next interval as Poisson(λ̂·T), and provisions for the SLA
+//! quantile via the exact inverse CDF. Functions whose execution time
+//! exceeds the interval carry requests over into subsequent intervals, so
+//! the demand is scaled by `ceil(exec / T)`.
+//!
+//! The estimator also maintains the per-DAG *queuing delay* EWMA + window
+//! that the SGS piggybacks to the LBS as the universal scaling signal
+//! (§5.2.1).
+
+use std::collections::HashMap;
+
+use crate::config::Micros;
+use crate::dag::DagId;
+use crate::util::rng::poisson_inv_cdf;
+use crate::util::stats::{Ewma, Window};
+
+/// Per-DAG arrival-rate estimator state.
+#[derive(Debug)]
+struct DagEstimate {
+    /// Requests observed in the current (open) interval.
+    interval_count: u64,
+    /// Smoothed arrivals-per-interval.
+    rate: Ewma,
+    /// Smoothed queuing delay (µs).
+    qdelay: Ewma,
+    /// Queuing-delay observation window gating LBS decisions.
+    qdelay_window: Window,
+}
+
+/// The SGS estimator module (Fig 4a).
+#[derive(Debug)]
+pub struct Estimator {
+    interval: Micros,
+    rate_alpha: f64,
+    qdelay_alpha: f64,
+    qdelay_window: usize,
+    sla: f64,
+    margin: f64,
+    dags: HashMap<DagId, DagEstimate>,
+}
+
+/// A point-in-time demand snapshot for one DAG.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DemandReport {
+    /// Smoothed arrivals per estimation interval.
+    pub rate_per_interval: f64,
+    /// SLA-quantile arrivals in one interval (before overflow scaling).
+    pub base_demand: u64,
+}
+
+impl Estimator {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        interval: Micros,
+        rate_alpha: f64,
+        qdelay_alpha: f64,
+        qdelay_window: usize,
+        sla: f64,
+        margin: f64,
+    ) -> Self {
+        Estimator {
+            interval,
+            rate_alpha,
+            qdelay_alpha,
+            qdelay_window,
+            sla,
+            margin,
+            dags: HashMap::new(),
+        }
+    }
+
+    pub fn interval(&self) -> Micros {
+        self.interval
+    }
+
+    fn entry(&mut self, dag: DagId) -> &mut DagEstimate {
+        let (ra, qa, qw) = (self.rate_alpha, self.qdelay_alpha, self.qdelay_window);
+        self.dags.entry(dag).or_insert_with(|| DagEstimate {
+            interval_count: 0,
+            rate: Ewma::new(ra),
+            qdelay: Ewma::new(qa),
+            qdelay_window: Window::new(qw),
+        })
+    }
+
+    /// Record one request arrival for `dag` (called on SGS enqueue of the
+    /// DAG's roots — one count per DAG request).
+    pub fn record_arrival(&mut self, dag: DagId) {
+        self.entry(dag).interval_count += 1;
+    }
+
+    /// Record a queuing-delay observation (µs) for `dag`.
+    pub fn record_qdelay(&mut self, dag: DagId, delay: Micros) {
+        let e = self.entry(dag);
+        e.qdelay.observe(delay as f64);
+        e.qdelay_window.observe(delay as f64);
+    }
+
+    /// Close the current interval for every DAG: fold the interval count
+    /// into the EWMA rate. Returns the per-DAG demand snapshots.
+    pub fn tick(&mut self) -> Vec<(DagId, DemandReport)> {
+        let sla = self.sla;
+        let mut out: Vec<(DagId, DemandReport)> = self
+            .dags
+            .iter_mut()
+            .map(|(dag, e)| {
+                let measured = e.interval_count as f64;
+                e.interval_count = 0;
+                let rate = e.rate.observe(measured);
+                let base = poisson_inv_cdf(sla, rate);
+                (
+                    *dag,
+                    DemandReport {
+                        rate_per_interval: rate,
+                        base_demand: base,
+                    },
+                )
+            })
+            .collect();
+        out.sort_by_key(|(d, _)| *d); // deterministic iteration order
+        out
+    }
+
+    /// Demand for a specific function: the base (per-interval) demand
+    /// scaled by the overflow factor for executions longer than T, plus
+    /// the worst-case provisioning margin (§4.3.1 / Fig 8b).
+    pub fn function_demand(&self, report: &DemandReport, exec_time: Micros) -> u32 {
+        let overflow = exec_time.div_ceil(self.interval).max(1);
+        let base = report.base_demand.saturating_mul(overflow);
+        if base == 0 {
+            return 0;
+        }
+        let with_margin = (base as f64 * (1.0 + self.margin)).ceil() as u64 + 1;
+        u32::try_from(with_margin).unwrap_or(u32::MAX)
+    }
+
+    /// Smoothed queuing delay (µs) for a DAG, if observed.
+    pub fn qdelay(&self, dag: DagId) -> Option<f64> {
+        self.dags.get(&dag).and_then(|e| e.qdelay.get())
+    }
+
+    /// Is the queuing-delay window full (LBS may act on it)? §5.2.2:
+    /// the LBS "makes the next scaling decision only once the windows are
+    /// filled up to avoid reacting to transient changes".
+    pub fn qdelay_window_full(&self, dag: DagId) -> bool {
+        self.dags
+            .get(&dag)
+            .map(|e| e.qdelay_window.is_full())
+            .unwrap_or(false)
+    }
+
+    /// Reset the queuing-delay window after an LBS scaling action so the
+    /// next decision observes post-action behaviour (§5.2.2).
+    pub fn reset_qdelay_window(&mut self, dag: DagId) {
+        if let Some(e) = self.dags.get_mut(&dag) {
+            e.qdelay_window.reset();
+        }
+    }
+
+    /// Seed the rate estimate for a DAG this SGS has just been assigned
+    /// (scale-out priming, §5.2.3) so the first estimator tick doesn't
+    /// collapse the primed allocation back to zero.
+    pub fn seed_rate(&mut self, dag: DagId, rate_per_interval: f64) {
+        let e = self.entry(dag);
+        if e.rate.get().is_none() {
+            e.rate.observe(rate_per_interval.max(0.0));
+        }
+    }
+
+    /// Stop tracking a DAG (it scaled away from this SGS entirely).
+    pub fn forget(&mut self, dag: DagId) {
+        self.dags.remove(&dag);
+    }
+
+    /// DAGs currently tracked.
+    pub fn tracked(&self) -> Vec<DagId> {
+        let mut v: Vec<DagId> = self.dags.keys().copied().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MS;
+
+    fn est() -> Estimator {
+        Estimator::new(100 * MS, 0.3, 0.3, 4, 0.99, 0.0)
+    }
+
+    #[test]
+    fn constant_rate_converges_and_demand_covers_sla() {
+        let mut e = est();
+        let dag = DagId(0);
+        // 50 arrivals per interval, steady
+        let mut last = DemandReport {
+            rate_per_interval: 0.0,
+            base_demand: 0,
+        };
+        for _ in 0..60 {
+            for _ in 0..50 {
+                e.record_arrival(dag);
+            }
+            let reports = e.tick();
+            last = reports[0].1;
+        }
+        assert!((last.rate_per_interval - 50.0).abs() < 0.5);
+        // Poisson(50) 99th percentile is ~67
+        assert!(last.base_demand >= 60 && last.base_demand <= 75,
+            "demand {}", last.base_demand);
+    }
+
+    #[test]
+    fn demand_scales_with_execution_overflow() {
+        let mut e = est();
+        let dag = DagId(0);
+        for _ in 0..20 {
+            for _ in 0..10 {
+                e.record_arrival(dag);
+            }
+            e.tick();
+        }
+        for _ in 0..10 {
+            e.record_arrival(dag);
+        }
+        let reports = e.tick();
+        let r = &reports[0].1;
+        let d_short = e.function_demand(r, 50 * MS); // exec < T: no scale
+        let d_exact = e.function_demand(r, 100 * MS); // exec == T: x1
+        let d_long = e.function_demand(r, 250 * MS); // exec 2.5T: x3
+        // margin 0 ⇒ demand = overflow·base + 1 (the +1 keeps at least
+        // one spare sandbox even at tiny rates)
+        assert_eq!(d_short, r.base_demand as u32 + 1);
+        assert_eq!(d_exact, r.base_demand as u32 + 1);
+        assert_eq!(d_long, 3 * r.base_demand as u32 + 1);
+    }
+
+    #[test]
+    fn rate_decays_when_arrivals_stop() {
+        let mut e = est();
+        let dag = DagId(0);
+        for _ in 0..30 {
+            for _ in 0..100 {
+                e.record_arrival(dag);
+            }
+            e.tick();
+        }
+        let high = e.tick();
+        for _ in 0..40 {
+            e.tick(); // silence
+        }
+        let low = e.tick();
+        assert!(low[0].1.rate_per_interval < high[0].1.rate_per_interval / 10.0);
+        assert!(low[0].1.base_demand < high[0].1.base_demand);
+    }
+
+    #[test]
+    fn qdelay_window_gates_and_resets() {
+        let mut e = est();
+        let dag = DagId(0);
+        assert!(!e.qdelay_window_full(dag));
+        for i in 0..4 {
+            assert!(!e.qdelay_window_full(dag), "at {i}");
+            e.record_qdelay(dag, 1000);
+        }
+        assert!(e.qdelay_window_full(dag));
+        assert!(e.qdelay(dag).unwrap() > 0.0);
+        e.reset_qdelay_window(dag);
+        assert!(!e.qdelay_window_full(dag));
+        // EWMA survives the window reset
+        assert!(e.qdelay(dag).is_some());
+    }
+
+    #[test]
+    fn tick_is_deterministically_ordered() {
+        let mut e = est();
+        for d in [3u32, 1, 2, 0] {
+            e.record_arrival(DagId(d));
+        }
+        let reports = e.tick();
+        let ids: Vec<u32> = reports.iter().map(|(d, _)| d.0).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn forget_removes_state() {
+        let mut e = est();
+        e.record_arrival(DagId(0));
+        e.record_qdelay(DagId(0), 5);
+        e.forget(DagId(0));
+        assert!(e.qdelay(DagId(0)).is_none());
+        assert!(e.tracked().is_empty());
+    }
+
+    #[test]
+    fn zero_rate_zero_demand() {
+        let mut e = est();
+        e.record_arrival(DagId(0));
+        e.tick(); // rate > 0
+        for _ in 0..200 {
+            e.tick();
+        }
+        let r = e.tick();
+        // decayed to ~0 → demand 0 or tiny
+        assert!(r[0].1.base_demand <= 1);
+    }
+}

@@ -1,0 +1,213 @@
+//! Hard-eviction victim selection (§4.3.3, Pseudocode 1 lines 39–46).
+//!
+//! When a worker's proactive memory pool is saturated and a new sandbox
+//! must be placed there, the SGS evicts resident sandboxes until the new
+//! one fits. Archipelago's **fair** policy victimizes the function whose
+//! current allocation is closest to (or most above) its demand estimate —
+//! functions already far *below* their estimate are protected. Soft-
+//! evicted sandboxes are always preferred over warm ones within the
+//! chosen function (handled by `SandboxTable::hard_evict_one`).
+//!
+//! The **LRU** ablation (§7.3.1) victimizes the least-recently-used
+//! function's sandboxes; the paper measures it 4.62× worse on tail
+//! latency because an off-period DAG loses all its sandboxes right before
+//! its next on-period.
+
+use std::collections::HashMap;
+
+use crate::config::EvictionPolicy;
+use crate::dag::FnId;
+use crate::worker::Worker;
+
+/// Pick the next victim function on `worker` for hard eviction, given
+/// per-function demand estimates. `protect` is the function we are
+/// making room for (never victimized).
+pub fn choose_victim(
+    worker: &Worker,
+    estimates: &HashMap<FnId, u32>,
+    protect: FnId,
+    policy: EvictionPolicy,
+) -> Option<FnId> {
+    match policy {
+        EvictionPolicy::Fair => {
+            // Only functions allocated *above* their estimate are
+            // candidates ("prevents functions whose allocations are far
+            // from their estimation being negatively impacted" — an
+            // under-provisioned function is never victimized; if no
+            // function has surplus, the eviction fails and the caller
+            // queues instead). Highest surplus loses first; soft-evicted
+            // count (excess by definition) is included in "allocated".
+            let mut best: Option<(i64, FnId)> = None;
+            for (f, evictable, _mem, _lu, soft) in worker.sandboxes.evictable() {
+                if f == protect || evictable == 0 {
+                    continue;
+                }
+                let active = worker.sandboxes.active(f);
+                let allocated = (active + soft) as i64;
+                let estimated = *estimates.get(&f).unwrap_or(&0) as i64;
+                let surplus = allocated - estimated;
+                if surplus <= 0 {
+                    continue; // protected: at or below its estimate
+                }
+                let better = match best {
+                    None => true,
+                    Some((s, bf)) => surplus > s || (surplus == s && f < bf),
+                };
+                if better {
+                    best = Some((surplus, f));
+                }
+            }
+            best.map(|(_, f)| f)
+        }
+        EvictionPolicy::Lru => {
+            let mut best: Option<(u64, FnId)> = None;
+            for (f, evictable, _mem, last_used, _soft) in worker.sandboxes.evictable() {
+                if f == protect || evictable == 0 {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((lu, bf)) => last_used < lu || (last_used == lu && f < bf),
+                };
+                if better {
+                    best = Some((last_used, f));
+                }
+            }
+            best.map(|(_, f)| f)
+        }
+    }
+}
+
+/// Evict sandboxes on `worker` until `need_mb` of pool memory is free.
+/// Returns the number of sandboxes evicted, or `None` if the space
+/// cannot be freed (everything else is busy).
+pub fn evict_until_fits(
+    worker: &mut Worker,
+    estimates: &HashMap<FnId, u32>,
+    protect: FnId,
+    need_mb: u64,
+    policy: EvictionPolicy,
+) -> Option<u32> {
+    let mut evicted = 0;
+    while worker.sandboxes.pool_free_mb() < need_mb {
+        let victim = choose_victim(worker, estimates, protect, policy)?;
+        worker
+            .sandboxes
+            .hard_evict_one(victim)
+            .expect("victim came from evictable()");
+        evicted += 1;
+    }
+    Some(evicted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::DagId;
+    use crate::worker::WorkerId;
+
+    fn fid(i: u16) -> FnId {
+        FnId {
+            dag: DagId(0),
+            idx: i,
+        }
+    }
+
+    fn worker_with(pool_mb: u64) -> Worker {
+        Worker::new(WorkerId(0), 4, pool_mb)
+    }
+
+    fn add_warm(w: &mut Worker, f: FnId, n: u32, last_used: u64) {
+        for _ in 0..n {
+            w.sandboxes.begin_setup(f, 128).unwrap();
+            w.sandboxes.finish_setup(f).unwrap();
+        }
+        if n > 0 {
+            w.sandboxes.acquire_warm(f, last_used).unwrap();
+            w.sandboxes.release(f, last_used).unwrap();
+        }
+    }
+
+    #[test]
+    fn fair_evicts_most_overprovisioned() {
+        let mut w = worker_with(4096);
+        add_warm(&mut w, fid(0), 4, 10); // estimate 1 → surplus 3
+        add_warm(&mut w, fid(1), 2, 5); // estimate 4 → surplus -2 (protected-ish)
+        let est = HashMap::from([(fid(0), 1u32), (fid(1), 4u32)]);
+        let v = choose_victim(&w, &est, fid(9), EvictionPolicy::Fair);
+        assert_eq!(v, Some(fid(0)));
+    }
+
+    #[test]
+    fn fair_treats_missing_estimate_as_zero() {
+        let mut w = worker_with(4096);
+        add_warm(&mut w, fid(0), 1, 10); // no estimate → surplus 1
+        add_warm(&mut w, fid(1), 2, 5); // estimate 5 → surplus -3
+        let est = HashMap::from([(fid(1), 5u32)]);
+        assert_eq!(
+            choose_victim(&w, &est, fid(9), EvictionPolicy::Fair),
+            Some(fid(0))
+        );
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut w = worker_with(4096);
+        add_warm(&mut w, fid(0), 2, 100);
+        add_warm(&mut w, fid(1), 2, 50); // older
+        let est = HashMap::new();
+        assert_eq!(
+            choose_victim(&w, &est, fid(9), EvictionPolicy::Lru),
+            Some(fid(1))
+        );
+    }
+
+    #[test]
+    fn protected_function_never_victim() {
+        let mut w = worker_with(4096);
+        add_warm(&mut w, fid(0), 3, 1);
+        let est = HashMap::new();
+        assert_eq!(choose_victim(&w, &est, fid(0), EvictionPolicy::Fair), None);
+        assert_eq!(choose_victim(&w, &est, fid(0), EvictionPolicy::Lru), None);
+    }
+
+    #[test]
+    fn evict_until_fits_frees_enough() {
+        let mut w = worker_with(512); // 4 × 128
+        add_warm(&mut w, fid(0), 2, 10);
+        add_warm(&mut w, fid(1), 2, 20);
+        assert_eq!(w.sandboxes.pool_free_mb(), 0);
+        let est = HashMap::from([(fid(0), 0u32), (fid(1), 2u32)]);
+        let n = evict_until_fits(&mut w, &est, fid(2), 256, EvictionPolicy::Fair)
+            .unwrap();
+        assert_eq!(n, 2);
+        assert!(w.sandboxes.pool_free_mb() >= 256);
+        // fair policy drained the over-provisioned fid(0) first
+        assert_eq!(w.sandboxes.active(fid(0)), 0);
+        assert_eq!(w.sandboxes.active(fid(1)), 2);
+    }
+
+    #[test]
+    fn evict_until_fits_fails_when_everything_busy() {
+        let mut w = worker_with(256);
+        w.sandboxes.acquire_cold(fid(0), 128, 0).unwrap();
+        w.sandboxes.acquire_cold(fid(1), 128, 0).unwrap();
+        let est = HashMap::new();
+        assert_eq!(
+            evict_until_fits(&mut w, &est, fid(2), 128, EvictionPolicy::Fair),
+            None
+        );
+    }
+
+    #[test]
+    fn evict_noop_when_space_already_free() {
+        let mut w = worker_with(1024);
+        add_warm(&mut w, fid(0), 1, 0);
+        let est = HashMap::new();
+        assert_eq!(
+            evict_until_fits(&mut w, &est, fid(1), 128, EvictionPolicy::Fair),
+            Some(0)
+        );
+        assert_eq!(w.sandboxes.active(fid(0)), 1, "nothing evicted");
+    }
+}

@@ -1,0 +1,254 @@
+//! Proactive sandbox placement across a worker pool (§4.3.2, Fig 4b).
+//!
+//! Archipelago's policy is **even spreading**: each new sandbox goes to
+//! the alive worker holding the fewest sandboxes of that function, which
+//! maximizes the probability that a future request finds a free core
+//! *and* a warm sandbox on the same machine (statistical multiplexing —
+//! Fig 9 shows packing misses ~70% of deadlines at load peaks).
+//!
+//! The ablation policy **packed** concentrates sandboxes on as few
+//! workers as possible (what a memory-minimizing placement would do).
+//! Soft-eviction site selection is the mirror image: take from the
+//! worker with the *most* sandboxes of the function (§4.3.3).
+
+use crate::config::PlacementPolicy;
+use crate::dag::FnId;
+use crate::worker::{WorkerId, WorkerPool};
+
+/// Choose the worker to host one new proactive sandbox of `f`.
+///
+/// Even: min active-sandbox count; ties by most free pool memory, then
+/// lowest id. Packed: max active-sandbox count among workers that can
+/// still fit the sandbox without eviction, falling back to even's choice
+/// when nobody fits (so packing still works when the pool saturates).
+pub fn choose_allocation_worker(
+    pool: &WorkerPool,
+    f: FnId,
+    mem_mb: u64,
+    policy: PlacementPolicy,
+) -> Option<WorkerId> {
+    match policy {
+        PlacementPolicy::Even => min_count_worker(pool, f),
+        PlacementPolicy::Packed => {
+            let mut best: Option<(u32, WorkerId)> = None;
+            for w in &pool.workers {
+                if !w.is_alive() {
+                    continue;
+                }
+                let fits = w.sandboxes.has_pool_mem(mem_mb)
+                    || w.sandboxes.soft(f) > 0; // revival needs no memory
+                if !fits {
+                    continue;
+                }
+                let count = w.sandboxes.active(f);
+                let better = match best {
+                    None => true,
+                    Some((c, id)) => count > c || (count == c && w.id.0 < id.0),
+                };
+                if better {
+                    best = Some((count, w.id));
+                }
+            }
+            best.map(|(_, id)| id).or_else(|| min_count_worker(pool, f))
+        }
+    }
+}
+
+fn min_count_worker(pool: &WorkerPool, f: FnId) -> Option<WorkerId> {
+    let mut best: Option<(u32, u64, WorkerId)> = None;
+    for w in &pool.workers {
+        if !w.is_alive() {
+            continue;
+        }
+        let count = w.sandboxes.active(f);
+        let free = w.sandboxes.pool_free_mb();
+        let better = match best {
+            None => true,
+            Some((c, fr, id)) => {
+                count < c
+                    || (count == c && free > fr)
+                    || (count == c && free == fr && w.id.0 < id.0)
+            }
+        };
+        if better {
+            best = Some((count, free, w.id));
+        }
+    }
+    best.map(|(_, _, id)| id)
+}
+
+/// Choose the worker to *soft-evict* one sandbox of `f` from. The
+/// eviction site mirrors the placement policy: under **even** placement
+/// the max-count worker sheds first — "the SGS follows a process similar
+/// to the placement approach ... with the only difference being that it
+/// selects the worker(s) that have the maximum sandboxes of this type"
+/// (§4.3.3) — which keeps the spread balanced. Under the **packed**
+/// ablation the min-count worker sheds first, so the policy keeps
+/// concentrating sandboxes (and reactively-created spread-out sandboxes
+/// are stripped at every demand trough — the Fig 9 behaviour).
+pub fn choose_soft_evict_worker(
+    pool: &WorkerPool,
+    f: FnId,
+    policy: PlacementPolicy,
+) -> Option<WorkerId> {
+    let mut best: Option<(u32, WorkerId)> = None;
+    for w in &pool.workers {
+        if !w.is_alive() {
+            continue;
+        }
+        let evictable = w.sandboxes.warm_idle(f);
+        if evictable == 0 {
+            continue;
+        }
+        let count = w.sandboxes.active(f);
+        let better = match (policy, best) {
+            (_, None) => true,
+            (PlacementPolicy::Even, Some((c, id))) => {
+                count > c || (count == c && w.id.0 < id.0)
+            }
+            (PlacementPolicy::Packed, Some((c, id))) => {
+                count < c || (count == c && w.id.0 < id.0)
+            }
+        };
+        if better {
+            best = Some((count, w.id));
+        }
+    }
+    best.map(|(_, id)| id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::DagId;
+
+    fn fid(i: u16) -> FnId {
+        FnId {
+            dag: DagId(0),
+            idx: i,
+        }
+    }
+
+    fn add_warm(pool: &mut WorkerPool, wid: u16, f: FnId, n: u32) {
+        for _ in 0..n {
+            pool.get_mut(WorkerId(wid))
+                .sandboxes
+                .begin_setup(f, 128)
+                .unwrap();
+            pool.get_mut(WorkerId(wid))
+                .sandboxes
+                .finish_setup(f)
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn even_picks_min_count_worker() {
+        let mut p = WorkerPool::new(3, 4, 4096);
+        add_warm(&mut p, 0, fid(0), 2);
+        add_warm(&mut p, 1, fid(0), 1);
+        // worker 2 has zero
+        let w = choose_allocation_worker(&p, fid(0), 128, PlacementPolicy::Even);
+        assert_eq!(w, Some(WorkerId(2)));
+    }
+
+    #[test]
+    fn even_spreads_round_robin_when_equal() {
+        let mut p = WorkerPool::new(4, 4, 4096);
+        let mut counts = vec![0u32; 4];
+        for _ in 0..8 {
+            let w = choose_allocation_worker(&p, fid(0), 128, PlacementPolicy::Even)
+                .unwrap();
+            counts[w.0 as usize] += 1;
+            add_warm(&mut p, w.0, fid(0), 1);
+        }
+        assert_eq!(counts, vec![2, 2, 2, 2], "even spread");
+    }
+
+    #[test]
+    fn even_only_counts_this_function() {
+        let mut p = WorkerPool::new(2, 4, 4096);
+        add_warm(&mut p, 0, fid(1), 5); // other function, ignored for f0 count
+        add_warm(&mut p, 1, fid(0), 1);
+        let w = choose_allocation_worker(&p, fid(0), 128, PlacementPolicy::Even);
+        assert_eq!(w, Some(WorkerId(0)));
+    }
+
+    #[test]
+    fn packed_concentrates_on_max_count_worker() {
+        let mut p = WorkerPool::new(3, 4, 4096);
+        add_warm(&mut p, 1, fid(0), 2);
+        for _ in 0..4 {
+            let w = choose_allocation_worker(&p, fid(0), 128, PlacementPolicy::Packed)
+                .unwrap();
+            assert_eq!(w, WorkerId(1));
+            add_warm(&mut p, 1, fid(0), 1);
+        }
+    }
+
+    #[test]
+    fn packed_spills_when_pool_full() {
+        let mut p = WorkerPool::new(2, 4, 256); // room for 2 sandboxes each
+        add_warm(&mut p, 0, fid(0), 2); // worker 0 pool full
+        let w = choose_allocation_worker(&p, fid(0), 128, PlacementPolicy::Packed);
+        assert_eq!(w, Some(WorkerId(1)));
+    }
+
+    #[test]
+    fn dead_workers_excluded() {
+        let mut p = WorkerPool::new(2, 4, 4096);
+        p.get_mut(WorkerId(0)).fail();
+        let w = choose_allocation_worker(&p, fid(0), 128, PlacementPolicy::Even);
+        assert_eq!(w, Some(WorkerId(1)));
+        p.get_mut(WorkerId(1)).fail();
+        assert_eq!(
+            choose_allocation_worker(&p, fid(0), 128, PlacementPolicy::Even),
+            None
+        );
+    }
+
+    #[test]
+    fn soft_evict_takes_from_max_worker() {
+        let mut p = WorkerPool::new(3, 4, 4096);
+        add_warm(&mut p, 0, fid(0), 1);
+        add_warm(&mut p, 1, fid(0), 3);
+        add_warm(&mut p, 2, fid(0), 2);
+        let w = choose_soft_evict_worker(&p, fid(0), PlacementPolicy::Even);
+        assert_eq!(w, Some(WorkerId(1)));
+    }
+
+    #[test]
+    fn soft_evict_requires_warm_idle() {
+        let mut p = WorkerPool::new(2, 4, 4096);
+        add_warm(&mut p, 0, fid(0), 1);
+        p.get_mut(WorkerId(0))
+            .sandboxes
+            .acquire_warm(fid(0), 0)
+            .unwrap(); // now busy, not evictable
+        assert_eq!(choose_soft_evict_worker(&p, fid(0), PlacementPolicy::Even), None);
+    }
+
+    #[test]
+    fn packed_soft_evict_takes_from_min_worker() {
+        let mut p = WorkerPool::new(3, 4, 4096);
+        add_warm(&mut p, 0, fid(0), 1);
+        add_warm(&mut p, 1, fid(0), 3);
+        let w = choose_soft_evict_worker(&p, fid(0), PlacementPolicy::Packed);
+        assert_eq!(w, Some(WorkerId(0)), "packing strips the spread-out one");
+    }
+
+    #[test]
+    fn soft_evict_then_allocate_rebalances() {
+        // soft-evict takes from max, allocation prefers min — together
+        // they keep the spread even (the §4.3.3 "balances ... to the
+        // extent possible" claim).
+        let mut p = WorkerPool::new(2, 4, 4096);
+        add_warm(&mut p, 0, fid(0), 4);
+        add_warm(&mut p, 1, fid(0), 1);
+        let wid = choose_soft_evict_worker(&p, fid(0), PlacementPolicy::Even).unwrap();
+        assert_eq!(wid, WorkerId(0));
+        p.get_mut(wid).sandboxes.soft_evict_one(fid(0)).unwrap();
+        let alloc = choose_allocation_worker(&p, fid(0), 128, PlacementPolicy::Even);
+        assert_eq!(alloc, Some(WorkerId(1)));
+    }
+}

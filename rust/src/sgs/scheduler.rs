@@ -1,0 +1,313 @@
+//! The SGS scheduling queue: shortest-remaining-slack-first (§4.2).
+//!
+//! Remaining slack of a queued function request at time `t` is
+//! `RS(f) = deadline_abs − t − cpl(f)` where `cpl(f)` is the critical-path
+//! execution time from `f` (inclusive) to the DAG sink. Because `t`
+//! shifts every queued request equally, SRSF ordering is induced by the
+//! *static* key `deadline_abs − cpl(f)` — so the queue is a plain binary
+//! heap with O(log n) operations and no re-keying, which is what keeps
+//! SGS scheduling decisions in the hundreds of nanoseconds (§7.4 budget:
+//! 241 µs median on the paper's Go prototype).
+//!
+//! Ties break by least remaining work (`cpl`), per the paper: finishing
+//! the shortest job first yields the next scheduling opportunity sooner.
+//! The same queue implements FIFO (baseline) by keying on arrival seq.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::{Micros, SchedPolicy};
+use crate::dag::{DagId, FnId};
+
+/// Platform-wide request identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// One schedulable function instance (a node of one request's DAG whose
+/// dependencies are satisfied).
+#[derive(Debug, Clone)]
+pub struct QueuedFn {
+    pub req: RequestId,
+    pub f: FnId,
+    pub dag: DagId,
+    /// When this function became runnable at the SGS (queuing-delay base).
+    pub enqueued_at: Micros,
+    /// Absolute deadline of the owning request.
+    pub deadline_abs: Micros,
+    /// Critical-path execution time from this function to the DAG sink,
+    /// inclusive of its own execution time.
+    pub remaining_work: Micros,
+    /// Sampled execution time for this request instance.
+    pub exec_time: Micros,
+    /// Cold-start cost if no warm sandbox is found.
+    pub setup_time: Micros,
+    pub mem_mb: u64,
+}
+
+impl QueuedFn {
+    /// Static SRSF key: `deadline_abs − cpl`. Smaller = more urgent.
+    /// Signed because a request can already be past its deadline.
+    pub fn srsf_key(&self) -> i64 {
+        self.deadline_abs as i64 - self.remaining_work as i64
+    }
+
+    /// Remaining slack at `now` (diagnostic; ordering uses the static key).
+    pub fn remaining_slack(&self, now: Micros) -> i64 {
+        self.srsf_key() - now as i64
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+struct HeapKey {
+    primary: i64,
+    tie_work: Micros,
+    seq: u64,
+}
+
+impl Ord for HeapKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.primary, self.tie_work, self.seq).cmp(&(
+            other.primary,
+            other.tie_work,
+            other.seq,
+        ))
+    }
+}
+
+impl PartialOrd for HeapKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The SGS's scheduling queue.
+#[derive(Debug)]
+pub struct SchedQueue {
+    policy: SchedPolicy,
+    heap: BinaryHeap<Reverse<(HeapKey, usize)>>,
+    slots: Vec<Option<QueuedFn>>,
+    free_slots: Vec<usize>,
+    seq: u64,
+    len: usize,
+}
+
+impl SchedQueue {
+    pub fn new(policy: SchedPolicy) -> Self {
+        SchedQueue {
+            policy,
+            heap: BinaryHeap::new(),
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            seq: 0,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
+    pub fn push(&mut self, q: QueuedFn) {
+        let seq = self.seq;
+        self.seq += 1;
+        let key = match self.policy {
+            SchedPolicy::Srsf => HeapKey {
+                primary: q.srsf_key(),
+                tie_work: q.remaining_work,
+                seq,
+            },
+            SchedPolicy::Fifo => HeapKey {
+                primary: seq as i64,
+                tie_work: 0,
+                seq,
+            },
+        };
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                self.slots[s] = Some(q);
+                s
+            }
+            None => {
+                self.slots.push(Some(q));
+                self.slots.len() - 1
+            }
+        };
+        self.heap.push(Reverse((key, slot)));
+        self.len += 1;
+    }
+
+    /// Pop the most urgent queued function.
+    pub fn pop(&mut self) -> Option<QueuedFn> {
+        let Reverse((_, slot)) = self.heap.pop()?;
+        let q = self.slots[slot].take().expect("heap/slot consistency");
+        self.free_slots.push(slot);
+        self.len -= 1;
+        Some(q)
+    }
+
+    /// Pop the most urgent function that satisfies `feasible`, scanning at
+    /// most `max_scan` candidates; infeasible candidates are reinserted
+    /// with their original keys. This implements §4.2's "filters requests
+    /// to only consider ones whose resource requirements are met by the
+    /// current available resources" with bounded work per decision.
+    pub fn pop_feasible(
+        &mut self,
+        max_scan: usize,
+        mut feasible: impl FnMut(&QueuedFn) -> bool,
+    ) -> Option<QueuedFn> {
+        let mut skipped: Vec<QueuedFn> = Vec::new();
+        let mut found = None;
+        for _ in 0..max_scan {
+            match self.pop() {
+                None => break,
+                Some(q) => {
+                    if feasible(&q) {
+                        found = Some(q);
+                        break;
+                    }
+                    skipped.push(q);
+                }
+            }
+        }
+        for q in skipped {
+            self.push(q);
+        }
+        found
+    }
+
+    /// Drain everything (SGS failure handling: requeue to other SGSs).
+    pub fn drain(&mut self) -> Vec<QueuedFn> {
+        let mut out = Vec::with_capacity(self.len);
+        while let Some(q) = self.pop() {
+            out.push(q);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MS;
+
+    fn qf(req: u64, deadline_abs: Micros, cpl: Micros) -> QueuedFn {
+        QueuedFn {
+            req: RequestId(req),
+            f: FnId {
+                dag: DagId(0),
+                idx: 0,
+            },
+            dag: DagId(0),
+            enqueued_at: 0,
+            deadline_abs,
+            remaining_work: cpl,
+            exec_time: cpl,
+            setup_time: 100 * MS,
+            mem_mb: 128,
+        }
+    }
+
+    #[test]
+    fn srsf_orders_by_static_slack_key() {
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        q.push(qf(1, 1000, 100)); // key 900
+        q.push(qf(2, 500, 100)); // key 400  <- most urgent
+        q.push(qf(3, 800, 300)); // key 500
+        assert_eq!(q.pop().unwrap().req, RequestId(2));
+        assert_eq!(q.pop().unwrap().req, RequestId(3));
+        assert_eq!(q.pop().unwrap().req, RequestId(1));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn srsf_tie_breaks_by_least_remaining_work() {
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        q.push(qf(1, 1000, 400)); // key 600, work 400
+        q.push(qf(2, 700, 100)); // key 600, work 100 <- wins tie
+        assert_eq!(q.pop().unwrap().req, RequestId(2));
+    }
+
+    #[test]
+    fn negative_slack_sorts_first() {
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        q.push(qf(1, 1000, 100));
+        q.push(qf(2, 50, 100)); // key -50: past deadline, most urgent
+        assert_eq!(q.pop().unwrap().req, RequestId(2));
+    }
+
+    #[test]
+    fn fifo_orders_by_arrival() {
+        let mut q = SchedQueue::new(SchedPolicy::Fifo);
+        q.push(qf(1, 1000, 100));
+        q.push(qf(2, 5, 1)); // urgent but FIFO ignores that
+        q.push(qf(3, 800, 300));
+        assert_eq!(q.pop().unwrap().req, RequestId(1));
+        assert_eq!(q.pop().unwrap().req, RequestId(2));
+        assert_eq!(q.pop().unwrap().req, RequestId(3));
+    }
+
+    #[test]
+    fn pop_feasible_skips_and_reinserts() {
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        q.push(qf(1, 100, 10)); // key 90, most urgent but infeasible
+        q.push(qf(2, 500, 10)); // key 490
+        let got = q.pop_feasible(8, |c| c.req != RequestId(1)).unwrap();
+        assert_eq!(got.req, RequestId(2));
+        assert_eq!(q.len(), 1);
+        // the skipped one is still there with its original priority
+        assert_eq!(q.pop().unwrap().req, RequestId(1));
+    }
+
+    #[test]
+    fn pop_feasible_bounded_scan() {
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        for i in 0..10 {
+            q.push(qf(i, 100 + i, 10));
+        }
+        // nothing feasible within scan depth 3
+        assert!(q.pop_feasible(3, |_| false).is_none());
+        assert_eq!(q.len(), 10, "all candidates reinserted");
+    }
+
+    #[test]
+    fn remaining_slack_decreases_with_time() {
+        let q = qf(1, 1000, 100);
+        assert_eq!(q.remaining_slack(0), 900);
+        assert_eq!(q.remaining_slack(500), 400);
+        assert_eq!(q.remaining_slack(1500), -600);
+    }
+
+    #[test]
+    fn drain_returns_all() {
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        for i in 0..5 {
+            q.push(qf(i, 1000, 100));
+        }
+        let drained = q.drain();
+        assert_eq!(drained.len(), 5);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn slot_reuse_keeps_consistency() {
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        for round in 0..10 {
+            for i in 0..100u64 {
+                q.push(qf(round * 100 + i, 1000 + i, 10));
+            }
+            for _ in 0..100 {
+                assert!(q.pop().is_some());
+            }
+        }
+        assert!(q.is_empty());
+        assert!(q.slots.len() <= 101, "slots recycled, not grown");
+    }
+}

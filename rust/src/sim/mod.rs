@@ -1,0 +1,212 @@
+//! Discrete-event simulation engine.
+//!
+//! The paper evaluated on a 74-machine CloudLab testbed; this build's
+//! substitute is a deterministic discrete-event simulator driving the
+//! *same* coordinator logic (see DESIGN.md §4). The engine is a classic
+//! calendar: a binary heap of `(time, seq, event)` with a strictly
+//! monotone sequence number so same-timestamp events dispatch in
+//! insertion order (determinism), plus a virtual clock.
+//!
+//! The event payload is generic; the platform instantiates it with its
+//! own event enum. The engine is deliberately unaware of what events
+//! mean — `run_until` pops and hands them to a handler closure which may
+//! push more events.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::Micros;
+
+/// A scheduled event: fires at `at`, dispatched in push order among
+/// equal timestamps.
+#[derive(Debug)]
+struct Scheduled<E> {
+    at: Micros,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// The event calendar + virtual clock.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<Scheduled<E>>>,
+    now: Micros,
+    seq: u64,
+    dispatched: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            now: 0,
+            seq: 0,
+            dispatched: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Micros {
+        self.now
+    }
+
+    /// Total events dispatched so far (perf metric).
+    pub fn dispatched(&self) -> u64 {
+        self.dispatched
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `at`; events in the past fire
+    /// "now" (clamped), which keeps handlers simple.
+    pub fn push_at(&mut self, at: Micros, event: E) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Scheduled { at, seq, event }));
+    }
+
+    /// Schedule `event` after a delay from the current virtual time.
+    pub fn push_after(&mut self, delay: Micros, event: E) {
+        self.push_at(self.now.saturating_add(delay), event);
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(Micros, E)> {
+        let Reverse(s) = self.heap.pop()?;
+        debug_assert!(s.at >= self.now, "time went backwards");
+        self.now = s.at;
+        self.dispatched += 1;
+        Some((s.at, s.event))
+    }
+
+    /// Peek at the next event time without dispatching.
+    pub fn peek_time(&self) -> Option<Micros> {
+        self.heap.peek().map(|Reverse(s)| s.at)
+    }
+}
+
+/// Drive a handler until the horizon (exclusive) or queue exhaustion.
+/// The handler gets `(queue, event)` and may push more events.
+pub fn run_until<E, S>(
+    queue: &mut EventQueue<E>,
+    state: &mut S,
+    horizon: Micros,
+    mut handler: impl FnMut(&mut EventQueue<E>, &mut S, E),
+) {
+    while let Some(at) = queue.peek_time() {
+        if at >= horizon {
+            break;
+        }
+        let (_, ev) = queue.pop().expect("peeked");
+        handler(queue, state, ev);
+    }
+    // advance the clock to the horizon even if idle
+    if queue.now < horizon {
+        queue.now = horizon;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_among_equal_timestamps() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.push_at(10, 1);
+        q.push_at(10, 2);
+        q.push_at(5, 0);
+        q.push_at(10, 3);
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        q.push_at(100, "a");
+        q.push_at(50, "b");
+        assert_eq!(q.now(), 0);
+        let (t1, e1) = q.pop().unwrap();
+        assert_eq!((t1, e1, q.now()), (50, "b", 50));
+        let (t2, _) = q.pop().unwrap();
+        assert_eq!((t2, q.now()), (100, 100));
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        q.push_at(100, 1);
+        q.pop();
+        q.push_at(10, 2); // in the past
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 100);
+    }
+
+    #[test]
+    fn push_after_uses_virtual_now() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        q.push_at(1000, 1);
+        q.pop();
+        q.push_after(50, 2);
+        assert_eq!(q.peek_time(), Some(1050));
+    }
+
+    #[test]
+    fn run_until_respects_horizon() {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for t in [10u64, 20, 30, 40, 50] {
+            q.push_at(t, t);
+        }
+        let mut seen = Vec::new();
+        run_until(&mut q, &mut seen, 35, |_q, seen, e| seen.push(e));
+        assert_eq!(seen, vec![10, 20, 30]);
+        assert_eq!(q.now(), 35);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn handler_can_push_cascading_events() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.push_at(0, 0);
+        let mut count = 0u32;
+        run_until(&mut q, &mut count, 1_000, |q, count, depth| {
+            *count += 1;
+            if depth < 9 {
+                q.push_after(10, depth + 1);
+            }
+        });
+        assert_eq!(count, 10);
+        assert_eq!(q.dispatched(), 10);
+    }
+}

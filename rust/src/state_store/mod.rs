@@ -1,0 +1,293 @@
+//! External reliable state store + fault-tolerance support (§6, §6.1).
+//!
+//! The paper keeps SGS state (proactive sandbox counts, estimation
+//! state) and LB state (per-DAG SGS mappings) in a reliable external
+//! store so a replacement instance can recover and continue. This module
+//! provides that store as a versioned key→JSON map with optional file
+//! persistence, plus the fail-stop failure detector used by the fault
+//! injection hooks.
+//!
+//! The store is deliberately simple (single-writer-per-key, last-write-
+//! wins with version check) — the paper assumes a reliable store rather
+//! than contributing one; what matters for reproduction is that recovery
+//! round-trips the exact state the services checkpoint.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::config::Micros;
+use crate::util::json::{self, Json};
+
+/// A versioned entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub version: u64,
+    pub value: Json,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum StoreError {
+    #[error("version conflict on '{key}': expected {expected}, found {found}")]
+    VersionConflict {
+        key: String,
+        expected: u64,
+        found: u64,
+    },
+    #[error("corrupt store file: {0}")]
+    Corrupt(String),
+}
+
+/// The reliable external store. Cheap to clone (shared handle) so every
+/// service holds one, as in the paper's deployment.
+#[derive(Debug, Clone, Default)]
+pub struct StateStore {
+    inner: Arc<Mutex<BTreeMap<String, Entry>>>,
+}
+
+impl StateStore {
+    pub fn new() -> Self {
+        StateStore::default()
+    }
+
+    /// Unconditional write; returns the new version.
+    pub fn put(&self, key: &str, value: Json) -> u64 {
+        let mut map = self.inner.lock().unwrap();
+        let e = map.entry(key.to_string()).or_insert(Entry {
+            version: 0,
+            value: Json::Null,
+        });
+        e.version += 1;
+        e.value = value;
+        e.version
+    }
+
+    /// Compare-and-swap on version (0 = create-only).
+    pub fn cas(&self, key: &str, expected: u64, value: Json) -> Result<u64, StoreError> {
+        let mut map = self.inner.lock().unwrap();
+        let found = map.get(key).map(|e| e.version).unwrap_or(0);
+        if found != expected {
+            return Err(StoreError::VersionConflict {
+                key: key.to_string(),
+                expected,
+                found,
+            });
+        }
+        let e = map.entry(key.to_string()).or_insert(Entry {
+            version: 0,
+            value: Json::Null,
+        });
+        e.version += 1;
+        e.value = value;
+        Ok(e.version)
+    }
+
+    pub fn get(&self, key: &str) -> Option<Entry> {
+        self.inner.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn delete(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().remove(key).is_some()
+    }
+
+    /// All keys with a prefix (e.g. `"sgs/3/"` for one SGS's state).
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect()
+    }
+
+    /// Serialize the full store (checkpoint file).
+    pub fn snapshot(&self) -> Json {
+        let map = self.inner.lock().unwrap();
+        Json::Obj(
+            map.iter()
+                .map(|(k, e)| {
+                    (
+                        k.clone(),
+                        json::obj(vec![
+                            ("version", Json::Int(e.version as i64)),
+                            ("value", e.value.clone()),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Restore from a checkpoint produced by [`snapshot`](Self::snapshot).
+    pub fn restore(snapshot: &Json) -> Result<StateStore, StoreError> {
+        let obj = snapshot
+            .as_obj()
+            .ok_or_else(|| StoreError::Corrupt("snapshot must be an object".into()))?;
+        let mut map = BTreeMap::new();
+        for (k, v) in obj {
+            let version = v
+                .req_u64("version")
+                .map_err(StoreError::Corrupt)?;
+            let value = v.req("value").map_err(StoreError::Corrupt)?.clone();
+            map.insert(k.clone(), Entry { version, value });
+        }
+        Ok(StateStore {
+            inner: Arc::new(Mutex::new(map)),
+        })
+    }
+
+    pub fn save_to_file(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.snapshot().to_pretty())
+    }
+
+    pub fn load_from_file(path: &std::path::Path) -> Result<StateStore, StoreError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| StoreError::Corrupt(e.to_string()))?;
+        let v = json::parse(&text).map_err(|e| StoreError::Corrupt(e.to_string()))?;
+        StateStore::restore(&v)
+    }
+}
+
+/// Fail-stop failure detector (§6.1 assumes failures are detected
+/// immediately). Services heartbeat; anything silent longer than the
+/// detection timeout is reported failed.
+#[derive(Debug)]
+pub struct FailureDetector {
+    timeout: Micros,
+    last_beat: HashMap<String, Micros>,
+}
+
+impl FailureDetector {
+    pub fn new(timeout: Micros) -> Self {
+        FailureDetector {
+            timeout,
+            last_beat: HashMap::new(),
+        }
+    }
+
+    pub fn heartbeat(&mut self, id: &str, now: Micros) {
+        self.last_beat.insert(id.to_string(), now);
+    }
+
+    /// Services considered failed at `now`.
+    pub fn failed(&self, now: Micros) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .last_beat
+            .iter()
+            .filter(|(_, &t)| now.saturating_sub(t) > self.timeout)
+            .map(|(k, _)| k.clone())
+            .collect();
+        out.sort();
+        out
+    }
+
+    pub fn forget(&mut self, id: &str) {
+        self.last_beat.remove(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MS, SEC};
+
+    #[test]
+    fn put_get_versions() {
+        let s = StateStore::new();
+        assert_eq!(s.put("a", Json::Int(1)), 1);
+        assert_eq!(s.put("a", Json::Int(2)), 2);
+        let e = s.get("a").unwrap();
+        assert_eq!(e.version, 2);
+        assert_eq!(e.value, Json::Int(2));
+        assert!(s.get("missing").is_none());
+    }
+
+    #[test]
+    fn cas_conflict_detection() {
+        let s = StateStore::new();
+        assert_eq!(s.cas("k", 0, Json::Bool(true)).unwrap(), 1);
+        assert_eq!(s.cas("k", 1, Json::Bool(false)).unwrap(), 2);
+        let err = s.cas("k", 1, Json::Null).unwrap_err();
+        assert_eq!(
+            err,
+            StoreError::VersionConflict {
+                key: "k".into(),
+                expected: 1,
+                found: 2
+            }
+        );
+    }
+
+    #[test]
+    fn shared_handle_sees_writes() {
+        let a = StateStore::new();
+        let b = a.clone();
+        a.put("x", Json::Str("y".into()));
+        assert_eq!(b.get("x").unwrap().value.as_str(), Some("y"));
+    }
+
+    #[test]
+    fn prefix_listing() {
+        let s = StateStore::new();
+        s.put("sgs/0/estimates", Json::Int(1));
+        s.put("sgs/0/sandboxes", Json::Int(2));
+        s.put("sgs/1/estimates", Json::Int(3));
+        s.put("lbs/mapping", Json::Int(4));
+        let keys = s.list("sgs/0/");
+        assert_eq!(keys, vec!["sgs/0/estimates", "sgs/0/sandboxes"]);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let s = StateStore::new();
+        s.put("a", Json::Int(1));
+        s.put("b", json::obj(vec![("nested", Json::Bool(true))]));
+        s.put("a", Json::Int(5)); // version 2
+        let snap = s.snapshot();
+        let r = StateStore::restore(&snap).unwrap();
+        assert_eq!(r.get("a").unwrap().version, 2);
+        assert_eq!(r.get("a").unwrap().value, Json::Int(5));
+        assert_eq!(
+            r.get("b").unwrap().value.get("nested"),
+            Some(&Json::Bool(true))
+        );
+    }
+
+    #[test]
+    fn file_persistence() {
+        let dir = std::env::temp_dir().join("archipelago_store_test");
+        let path = dir.join("store.json");
+        let s = StateStore::new();
+        s.put("dag/0/sgs_list", Json::Arr(vec![Json::Int(0), Json::Int(3)]));
+        s.save_to_file(&path).unwrap();
+        let r = StateStore::load_from_file(&path).unwrap();
+        assert_eq!(
+            r.get("dag/0/sgs_list").unwrap().value,
+            Json::Arr(vec![Json::Int(0), Json::Int(3)])
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_rejects_garbage() {
+        assert!(StateStore::restore(&Json::Int(3)).is_err());
+        let bad = json::parse(r#"{"k": {"version": "x", "value": 1}}"#).unwrap();
+        assert!(StateStore::restore(&bad).is_err());
+    }
+
+    #[test]
+    fn failure_detector_flags_silent_services() {
+        let mut fd = FailureDetector::new(500 * MS);
+        fd.heartbeat("sgs-0", 0);
+        fd.heartbeat("sgs-1", 0);
+        assert!(fd.failed(100 * MS).is_empty());
+        fd.heartbeat("sgs-0", 600 * MS);
+        let failed = fd.failed(SEC);
+        assert_eq!(failed, vec!["sgs-1"]);
+        fd.forget("sgs-1");
+        assert!(fd.failed(SEC).is_empty());
+    }
+}

@@ -1,0 +1,156 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Measures closures with warmup, batched timing to amortize clock reads,
+//! and exact-percentile reporting — the §7.4 overhead numbers (median +
+//! 99%-ile in microseconds) come straight from [`BenchResult`].
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One benchmark's measured distribution (per-iteration latencies, ns).
+#[derive(Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    samples_ns: Summary,
+}
+
+impl BenchResult {
+    pub fn median_ns(&mut self) -> f64 {
+        self.samples_ns.quantile(0.5)
+    }
+
+    pub fn p99_ns(&mut self) -> f64 {
+        self.samples_ns.quantile(0.99)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.mean()
+    }
+
+    pub fn quantile_ns(&mut self, q: f64) -> f64 {
+        self.samples_ns.quantile(q)
+    }
+
+    /// `name  median  p99  mean` line in adaptive units.
+    pub fn report_line(&mut self) -> String {
+        let med = self.median_ns();
+        let p99 = self.p99_ns();
+        let mean = self.mean_ns();
+        format!(
+            "{:<44} median={:>10}  p99={:>10}  mean={:>10}  (n={})",
+            self.name,
+            fmt_ns(med),
+            fmt_ns(p99),
+            fmt_ns(mean),
+            self.iterations,
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.2} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// iterations per timing sample (amortizes `Instant::now`)
+    pub batch: u64,
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            batch: 1,
+            max_samples: 50_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            batch: 1,
+            max_samples: 20_000,
+        }
+    }
+
+    /// Run `f` repeatedly; each invocation's return value is black-boxed.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup phase
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measurement
+        let mut samples = Summary::new();
+        let mut iterations = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples.count() < self.max_samples {
+            let t0 = Instant::now();
+            for _ in 0..self.batch {
+                black_box(f());
+            }
+            let per_iter = t0.elapsed().as_nanos() as f64 / self.batch as f64;
+            samples.record(per_iter);
+            iterations += self.batch;
+        }
+        BenchResult {
+            name: name.to_string(),
+            iterations,
+            samples_ns: samples,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            batch: 10,
+            max_samples: 10_000,
+        };
+        let mut r = b.run("noop-ish", || {
+            let mut x = 0u64;
+            for i in 0..10 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.iterations > 0);
+        assert!(r.median_ns() > 0.0);
+        assert!(r.p99_ns() >= r.median_ns());
+        assert!(r.report_line().contains("median="));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5_000_000_000.0).ends_with(" s"));
+    }
+}

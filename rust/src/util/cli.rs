@@ -1,0 +1,210 @@
+//! Minimal command-line parser (clap is unavailable offline).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]` — enough for the `archipelago` launcher, the figure
+//! harness and the examples. Unknown options are errors; `--help` is
+//! synthesized from the declared options.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Declared option for help text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name} expects a number, got '{v}'"))),
+        }
+    }
+}
+
+/// Command definition: name, about line, options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            takes_value: false,
+            help,
+        });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            takes_value: true,
+            help,
+        });
+        self
+    }
+
+    fn spec(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    pub fn help_text(&self, bin: &str) -> String {
+        let mut s = format!("{}\n\nUsage: {bin} {} [options]\n\nOptions:\n", self.about, self.name);
+        for o in &self.opts {
+            let arg = if o.takes_value {
+                format!("--{} <value>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            s.push_str(&format!("  {arg:<28} {}\n", o.help));
+        }
+        s.push_str("  --help                       show this help\n");
+        s
+    }
+
+    /// Parse raw args (excluding binary + subcommand names).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body == "help" {
+                    return Err(CliError(self.help_text("archipelago")));
+                }
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .spec(name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}")))?;
+                let value = if spec.takes_value {
+                    match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError(format!("--{name} requires a value")))?
+                            .clone(),
+                    }
+                } else {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!("--{name} does not take a value")));
+                    }
+                    "true".to_string()
+                };
+                args.flags.insert(name.to_string(), value);
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("simulate", "run a simulation")
+            .opt("seed", "rng seed")
+            .opt("duration", "seconds")
+            .flag("verbose", "chatty output")
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_options_and_flags() {
+        let a = cmd()
+            .parse(&s(&["--seed", "7", "--verbose", "pos1", "--duration=30"]))
+            .unwrap();
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("duration"), Some("30"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let a = cmd().parse(&s(&[])).unwrap();
+        assert_eq!(a.get_u64("seed", 42).unwrap(), 42);
+        assert_eq!(a.get_f64("duration", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_or("seed", "x"), "x");
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cmd().parse(&s(&["--nope"])).is_err());
+        assert!(cmd().parse(&s(&["--seed"])).is_err());
+        assert!(cmd().parse(&s(&["--verbose=1"])).is_err());
+        assert!(cmd().parse(&s(&["--seed", "abc"])).unwrap().get_u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn help_raises_with_text() {
+        let err = cmd().parse(&s(&["--help"])).unwrap_err();
+        assert!(err.0.contains("Usage:"));
+        assert!(err.0.contains("--seed"));
+    }
+}

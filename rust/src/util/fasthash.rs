@@ -1,0 +1,90 @@
+//! Fast hashing for hot-path maps (perf pass, EXPERIMENTS.md §Perf).
+//!
+//! std's default SipHash is DoS-resistant but costs ~10–20 ns per lookup;
+//! the platform's per-event maps (request table, per-worker sandbox
+//! tables) are keyed by internal dense ids that no adversary controls,
+//! so a splitmix64 finalizer suffices and measurably raises simulator
+//! throughput.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// splitmix64-finalizer hasher for integer-like keys.
+#[derive(Default)]
+pub struct SplitMixHasher {
+    state: u64,
+}
+
+impl Hasher for SplitMixHasher {
+    fn finish(&self) -> u64 {
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        // fold arbitrary bytes (used for compound keys like FnId)
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.state = self
+                .state
+                .rotate_left(29)
+                .wrapping_add(u64::from_le_bytes(buf))
+                .wrapping_mul(0x9E3779B97F4A7C15);
+        }
+    }
+
+    fn write_u64(&mut self, i: u64) {
+        self.state = self
+            .state
+            .rotate_left(29)
+            .wrapping_add(i)
+            .wrapping_mul(0x9E3779B97F4A7C15);
+    }
+
+    fn write_u32(&mut self, i: u32) {
+        self.write_u64(u64::from(i));
+    }
+
+    fn write_u16(&mut self, i: u16) {
+        self.write_u64(u64::from(i));
+    }
+}
+
+/// HashMap with the splitmix hasher.
+pub type FastMap<K, V> = std::collections::HashMap<K, V, BuildHasherDefault<SplitMixHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_basic_ops() {
+        let mut m: FastMap<u64, u32> = FastMap::default();
+        for i in 0..1000u64 {
+            m.insert(i, (i * 2) as u32);
+        }
+        for i in 0..1000u64 {
+            assert_eq!(m.get(&i), Some(&((i * 2) as u32)));
+        }
+        assert_eq!(m.len(), 1000);
+        m.remove(&500);
+        assert_eq!(m.get(&500), None);
+    }
+
+    #[test]
+    fn hash_distribution_no_catastrophic_collisions() {
+        use std::hash::{BuildHasher, Hash};
+        let bh: BuildHasherDefault<SplitMixHasher> = Default::default();
+        let mut buckets = [0u32; 64];
+        for i in 0..64_000u64 {
+            let mut h = bh.build_hasher();
+            i.hash(&mut h);
+            buckets[(h.finish() % 64) as usize] += 1;
+        }
+        for b in buckets {
+            assert!(b > 500 && b < 1500, "bucket skew: {b}");
+        }
+    }
+}

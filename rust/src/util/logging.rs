@@ -1,0 +1,116 @@
+//! Leveled stderr logger, env-controlled (`ARCHIPELAGO_LOG=debug|info|warn|error|off`).
+//!
+//! Deliberately minimal: one global atomic level, zero allocation when the
+//! level filters the message out — nothing on the request hot path may
+//! allocate for a disabled log line.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+    Off = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        3 => Level::Error,
+        _ => Level::Off,
+    }
+}
+
+/// Initialize from the environment; call once from main().
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("ARCHIPELAGO_LOG") {
+        let lvl = match v.to_ascii_lowercase().as_str() {
+            "debug" => Level::Debug,
+            "info" => Level::Info,
+            "warn" => Level::Warn,
+            "error" => Level::Error,
+            "off" | "none" => Level::Off,
+            _ => Level::Warn,
+        };
+        set_level(lvl);
+    }
+}
+
+pub fn enabled(level: Level) -> bool {
+    level >= self::level() && self::level() != Level::Off
+}
+
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+            Level::Off => return,
+        };
+        eprintln!("[{tag}] {target}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::Debug) {
+            $crate::util::logging::log($crate::util::logging::Level::Debug, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::Info) {
+            $crate::util::logging::log($crate::util::logging::Level::Info, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::util::logging::enabled($crate::util::logging::Level::Warn) {
+            $crate::util::logging::log($crate::util::logging::Level::Warn, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, $target, format_args!($($arg)*));
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_and_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        set_level(Level::Warn); // restore default for other tests
+    }
+}

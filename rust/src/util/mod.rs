@@ -1,0 +1,20 @@
+//! Substrate utilities built from scratch for the offline environment.
+//!
+//! The paper's Go prototype leaned on the Go standard library plus
+//! protobuf/Prometheus; this build has no network access to crates.io, so
+//! the equivalents live here: a JSON parser/writer ([`json`]), a
+//! deterministic PRNG with the distributions the workload generator and
+//! estimator need ([`rng`]), streaming statistics ([`stats`]), a CLI
+//! argument parser ([`cli`]), a micro-benchmark harness ([`bench`]), a
+//! miniature property-testing framework ([`prop`]) and a leveled logger
+//! ([`logging`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub mod fasthash;

@@ -1,0 +1,219 @@
+//! Miniature property-testing framework (proptest is unavailable offline).
+//!
+//! Provides seeded random case generation with failure shrinking for the
+//! coordinator-invariant tests in `rust/tests/proptests.rs`. A property is
+//! a closure over a [`Gen`] source returning `Result<(), String>`; on
+//! failure the runner re-runs with smaller size parameters and reports the
+//! seed so the case replays deterministically.
+
+use super::rng::Rng;
+
+/// Case generation source: an RNG plus a "size" budget that the runner
+/// shrinks after a failure.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    /// Vec with length scaled by the current size budget.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let cap = max_len.min(self.size.max(1));
+        let len = self.usize(0, cap + 1);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty());
+        &items[self.usize(0, items.len())]
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub struct PropReport {
+    pub cases: usize,
+    pub failure: Option<PropFailure>,
+}
+
+#[derive(Debug)]
+pub struct PropFailure {
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+    pub shrunk: bool,
+}
+
+/// Property-test runner.
+pub struct Runner {
+    pub cases: usize,
+    pub start_size: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner {
+            cases: 128,
+            start_size: 32,
+            base_seed: seed_from_env(),
+        }
+    }
+}
+
+fn seed_from_env() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA5C1_9E1A_u64 ^ 0x1234_5678)
+}
+
+impl Runner {
+    pub fn new(cases: usize) -> Self {
+        Runner {
+            cases,
+            ..Runner::default()
+        }
+    }
+
+    /// Run the property across `cases` seeds; on failure, attempt shrink
+    /// by halving the size budget while the failure reproduces.
+    pub fn run(
+        &self,
+        name: &str,
+        prop: impl Fn(&mut Gen) -> Result<(), String>,
+    ) -> PropReport {
+        for case in 0..self.cases {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            // grow size with case index so early cases are small
+            let size = 1 + (self.start_size * (case + 1)) / self.cases;
+            let mut gen = Gen {
+                rng: Rng::new(seed),
+                size,
+            };
+            if let Err(msg) = prop(&mut gen) {
+                // shrink: halve size while still failing with same seed
+                let mut best = (size, msg.clone(), false);
+                let mut s = size / 2;
+                while s >= 1 {
+                    let mut g = Gen {
+                        rng: Rng::new(seed),
+                        size: s,
+                    };
+                    match prop(&mut g) {
+                        Err(m) => {
+                            best = (s, m, true);
+                            if s == 1 {
+                                break;
+                            }
+                            s /= 2;
+                        }
+                        Ok(()) => break,
+                    }
+                }
+                return PropReport {
+                    cases: case + 1,
+                    failure: Some(PropFailure {
+                        seed,
+                        size: best.0,
+                        message: format!("property '{name}': {}", best.1),
+                        shrunk: best.2,
+                    }),
+                };
+            }
+        }
+        PropReport {
+            cases: self.cases,
+            failure: None,
+        }
+    }
+}
+
+/// Assert a property holds; panics with seed + message on failure.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let report = Runner::new(cases).run(name, prop);
+    if let Some(f) = report.failure {
+        panic!(
+            "{} (seed={}, size={}, shrunk={}) — replay with PROP_SEED={}",
+            f.message, f.seed, f.size, f.shrunk, f.seed
+        );
+    }
+}
+
+/// Convenience assertion macro for inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let r = Runner::new(50).run("tautology", |g| {
+            let v = g.vec(10, |g| g.u64(0, 100));
+            if v.len() <= 10 {
+                Ok(())
+            } else {
+                Err("vec too long".into())
+            }
+        });
+        assert_eq!(r.cases, 50);
+        assert!(r.failure.is_none());
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        let r = Runner::new(100).run("always-fails-on-large", |g| {
+            let v = g.vec(64, |g| g.u64(0, 10));
+            if v.len() > 2 {
+                Err(format!("len {}", v.len()))
+            } else {
+                Ok(())
+            }
+        });
+        let f = r.failure.expect("should fail");
+        assert!(f.message.contains("len"));
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with PROP_SEED")]
+    fn check_panics_with_seed() {
+        check("boom", 10, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_given_same_seed() {
+        let mk = |seed| {
+            let mut g = Gen {
+                rng: Rng::new(seed),
+                size: 16,
+            };
+            g.vec(16, |g| g.u64(0, 1000))
+        };
+        assert_eq!(mk(42), mk(42));
+        assert_ne!(mk(42), mk(43));
+    }
+}

@@ -1,0 +1,450 @@
+//! Deterministic PRNG + the distributions the platform needs.
+//!
+//! Core generator is splitmix64-seeded **xoshiro256++** — fast, tiny state,
+//! excellent statistical quality for simulation work. On top of it:
+//! uniform ranges, exponential (request inter-arrivals, §4.3.1's model),
+//! Poisson (demand estimation cross-checks and workload synthesis), normal
+//! (Box–Muller, for noisy execution times), log-normal (SAR code-size /
+//! exec-time synthesis) and weighted choice (lottery scheduling, §5.2.3).
+//!
+//! Every component that needs randomness takes an explicit `&mut Rng`
+//! derived from the experiment seed, so whole macrobenchmarks replay
+//! bit-identically.
+
+/// xoshiro256++ generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second normal from Box–Muller
+    spare_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seeded construction; any u64 (including 0) is a valid seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng {
+            s,
+            spare_normal: None,
+        }
+    }
+
+    /// Derive an independent child stream (per-DAG / per-class streams).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit precision.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[lo, hi)`; panics if `lo >= hi`.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi, "empty range [{lo}, {hi})");
+        let span = hi - lo;
+        // Lemire's nearly-divisionless unbiased method.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (span as u128);
+        let mut l = m as u64;
+        if l < span {
+            let t = span.wrapping_neg() % span;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (span as u128);
+                l = m as u64;
+            }
+        }
+        lo + (m >> 64) as u64
+    }
+
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with rate `lambda` (mean `1/lambda`).
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        // Avoid ln(0) by using 1 - U in (0, 1].
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Standard normal via Box–Muller with spare caching.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Normal with explicit mean / std-dev.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Log-normal given the *underlying* normal's mu/sigma.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Poisson-distributed count with mean `lambda`.
+    ///
+    /// Knuth's product method for small lambda; for large lambda the
+    /// normal approximation with continuity correction (adequate for
+    /// workload synthesis — estimator-side quantiles use the exact CDF in
+    /// `poisson_inv_cdf`, not this sampler).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        assert!(lambda >= 0.0);
+        if lambda == 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        }
+        let z = self.normal();
+        let v = lambda + z * lambda.sqrt() + 0.5;
+        if v < 0.0 {
+            0
+        } else {
+            v as u64
+        }
+    }
+
+    /// Weighted index choice; weights must be non-negative with a positive
+    /// sum. This is the lottery draw of §5.2.3.
+    pub fn weighted_choice(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "weighted_choice needs positive finite total, got {total}"
+        );
+        let mut target = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            debug_assert!(*w >= 0.0);
+            if target < *w {
+                return i;
+            }
+            target -= w;
+        }
+        // float round-off: return last index with positive weight
+        weights
+            .iter()
+            .rposition(|w| *w > 0.0)
+            .expect("positive total implies a positive weight")
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.range_usize(0, i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Sample one element uniformly.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty());
+        &items[self.range_usize(0, items.len())]
+    }
+}
+
+/// Exact Poisson inverse CDF: smallest k with `P(X <= k) >= q`.
+///
+/// This is the estimator's core primitive (§4.3.1, Fig 5): given the SLA
+/// quantile (e.g. 0.99) and the expected arrivals `lambda` in interval T,
+/// it returns the provisioning count. Computed by direct summation of
+/// pmf terms in stable recursive form; lambda in this system is bounded by
+/// (peak RPS × T) which stays ≪ 10^5, so summation is fast and exact
+/// enough (term-wise multiplicative recurrence, no factorials).
+pub fn poisson_inv_cdf(q: f64, lambda: f64) -> u64 {
+    assert!((0.0..1.0).contains(&q) || q == 1.0, "quantile {q}");
+    assert!(lambda >= 0.0);
+    if lambda == 0.0 {
+        return 0;
+    }
+    // For very large lambda fall back to normal approximation to bound work.
+    if lambda > 1e6 {
+        let z = normal_inv_cdf(q);
+        let v = lambda + z * lambda.sqrt() + 0.5;
+        return if v < 0.0 { 0 } else { v as u64 };
+    }
+    let mut k = 0u64;
+    // work in log space to avoid underflow for large lambda:
+    // pmf(0) = exp(-lambda)
+    let mut log_pmf = -lambda;
+    let mut cdf = log_pmf.exp();
+    let target = q.min(1.0 - 1e-15);
+    while cdf < target {
+        k += 1;
+        log_pmf += lambda.ln() - (k as f64).ln();
+        cdf += log_pmf.exp();
+        if k > 100_000_000 {
+            break; // defensive; unreachable for sane inputs
+        }
+    }
+    k
+}
+
+/// Acklam's rational approximation to the standard normal inverse CDF.
+/// Max relative error ~1.15e-9 — plenty for provisioning quantiles.
+pub fn normal_inv_cdf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "p must be in (0,1), got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let mut c = Rng::new(8);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        let zs: Vec<u64> = (0..16).map(|_| c.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut root = Rng::new(1);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_bounds_and_coverage() {
+        let mut r = Rng::new(4);
+        let mut seen = [false; 10];
+        for _ in 0..1_000 {
+            let v = r.range_u64(5, 15);
+            assert!((5..15).contains(&v));
+            seen[(v - 5) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all values in range should appear");
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut r = Rng::new(5);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.exp(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.005, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(6);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn poisson_small_lambda_moments() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| r.poisson(3.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_large_lambda_moments() {
+        let mut r = Rng::new(8);
+        let n = 50_000;
+        let mean: f64 =
+            (0..n).map(|_| r.poisson(500.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 500.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_inv_cdf_known_values() {
+        // lambda=10: P(X<=15)≈0.9513, P(X<=18)≈0.9928, P(X<=20)≈0.9984
+        assert_eq!(poisson_inv_cdf(0.95, 10.0), 15);
+        assert_eq!(poisson_inv_cdf(0.99, 10.0), 18);
+        assert_eq!(poisson_inv_cdf(0.5, 10.0), 10);
+        assert_eq!(poisson_inv_cdf(0.99, 0.0), 0);
+        // monotone in q and lambda
+        assert!(poisson_inv_cdf(0.999, 10.0) >= poisson_inv_cdf(0.9, 10.0));
+        assert!(poisson_inv_cdf(0.99, 50.0) >= poisson_inv_cdf(0.99, 10.0));
+    }
+
+    #[test]
+    fn poisson_inv_cdf_matches_sampling() {
+        // empirical 99th percentile of Poisson(20) should be close
+        let mut r = Rng::new(9);
+        let mut xs: Vec<u64> = (0..100_000).map(|_| r.poisson(20.0)).collect();
+        xs.sort_unstable();
+        let emp = xs[(0.99 * xs.len() as f64) as usize];
+        let exact = poisson_inv_cdf(0.99, 20.0);
+        assert!((emp as i64 - exact as i64).abs() <= 1, "{emp} vs {exact}");
+    }
+
+    #[test]
+    fn normal_inv_cdf_symmetry_and_known() {
+        assert!((normal_inv_cdf(0.5)).abs() < 1e-8);
+        assert!((normal_inv_cdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((normal_inv_cdf(0.025) + 1.959964).abs() < 1e-4);
+        assert!((normal_inv_cdf(0.99) - 2.326348).abs() < 1e-4);
+    }
+
+    #[test]
+    fn weighted_choice_respects_weights() {
+        let mut r = Rng::new(10);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.weighted_choice(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.2, "ratio {ratio}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn weighted_choice_rejects_zero_total() {
+        let mut r = Rng::new(11);
+        r.weighted_choice(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(12);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut r = Rng::new(13);
+        for _ in 0..1000 {
+            assert!(r.lognormal(0.0, 2.0) > 0.0);
+        }
+    }
+}

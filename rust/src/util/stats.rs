@@ -1,0 +1,454 @@
+//! Streaming statistics: percentile sketches, EWMA, counters.
+//!
+//! The paper reports tail latencies (99%, 99.9%-ile), queuing-delay
+//! distributions and EWMA-based rate estimates (§4.3.1, §5.2.1). This
+//! module provides:
+//!
+//! * [`Ewma`] — the exact estimator primitive from §4.3.1/§5.2.1.
+//! * [`LogHistogram`] — HDR-style log-bucketed histogram: ~0.5% relative
+//!   error per bucket, O(1) record, used for all latency metrics so
+//!   million-request macrobenchmarks stay O(buckets) in memory.
+//! * [`Summary`] — exact small-sample percentiles (sorted vec) for
+//!   microbenches where exactness matters.
+
+/// Exponentially weighted moving average: `e ← α·x + (1-α)·e`.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha), "alpha {alpha}");
+        Ewma { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Log-bucketed histogram over `u64` values (we use microseconds).
+///
+/// Buckets: value 0, then for each power-of-two range, `SUBDIV` linear
+/// sub-buckets — bounded ~0.8% relative quantile error with 64*SUBDIV
+/// buckets total.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+const SUBDIV_BITS: u32 = 5; // 32 sub-buckets per octave
+const SUBDIV: u64 = 1 << SUBDIV_BITS;
+
+fn bucket_index(v: u64) -> usize {
+    if v < SUBDIV {
+        return v as usize; // exact buckets for tiny values
+    }
+    let msb = 63 - v.leading_zeros() as u64;
+    let shift = msb - SUBDIV_BITS as u64;
+    let sub = (v >> shift) & (SUBDIV - 1);
+    ((msb - SUBDIV_BITS as u64 + 1) * SUBDIV + sub) as usize
+}
+
+fn bucket_low(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < SUBDIV {
+        return idx;
+    }
+    let octave = idx / SUBDIV - 1;
+    let sub = idx % SUBDIV;
+    (SUBDIV + sub) << octave
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0; ((64 - SUBDIV_BITS as usize) + 1) * SUBDIV as usize],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        self.counts[bucket_index(v)] += n;
+        self.total += n;
+        self.sum += v as u128 * n as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in `[0, 1]`; returns the low edge of the containing
+    /// bucket, clamped by the observed min/max for tight small-sample
+    /// behaviour.
+    pub fn quantile(&self, q: f64) -> u64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_low(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// (p50, p90, p99, p999, max) — the paper's reporting set.
+    pub fn tail_summary(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.quantile(0.50),
+            self.quantile(0.90),
+            self.quantile(0.99),
+            self.quantile(0.999),
+            self.max(),
+        )
+    }
+}
+
+/// Exact-percentile summary: keeps every sample. For microbenchmarks and
+/// tests, not for million-request runs.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+    }
+
+    /// Nearest-rank percentile; `q` in [0, 1].
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        self.samples[rank - 1]
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.quantile(0.0).min(
+            self.samples
+                .first()
+                .copied()
+                .unwrap_or(0.0),
+        )
+    }
+
+    pub fn max(&mut self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        *self.samples.last().unwrap()
+    }
+}
+
+/// Windowed mean over the most recent `capacity` observations — used for
+/// the queuing-delay windows the LBS scaling decision reads (§5.2.1:
+/// "having a window ensures the system does not react to transient
+/// changes").
+#[derive(Debug, Clone)]
+pub struct Window {
+    buf: Vec<f64>,
+    capacity: usize,
+    next: usize,
+    filled: bool,
+}
+
+impl Window {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Window {
+            buf: Vec::with_capacity(capacity),
+            capacity,
+            next: 0,
+            filled: false,
+        }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(v);
+            if self.buf.len() == self.capacity {
+                self.filled = true;
+            }
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % self.capacity;
+            self.filled = true;
+        }
+    }
+
+    /// True once `capacity` observations have arrived since the last reset.
+    pub fn is_full(&self) -> bool {
+        self.filled
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.buf.is_empty() {
+            None
+        } else {
+            Some(self.buf.iter().sum::<f64>() / self.buf.len() as f64)
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.next = 0;
+        self.filled = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_first_observation_is_identity() {
+        let mut e = Ewma::new(0.2);
+        assert_eq!(e.get(), None);
+        assert_eq!(e.observe(10.0), 10.0);
+        let v = e.observe(20.0);
+        assert!((v - 12.0).abs() < 1e-12); // 0.2*20 + 0.8*10
+    }
+
+    #[test]
+    fn ewma_converges_to_constant_input() {
+        let mut e = Ewma::new(0.3);
+        for _ in 0..200 {
+            e.observe(5.0);
+        }
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_reset() {
+        let mut e = Ewma::new(0.5);
+        e.observe(1.0);
+        e.reset();
+        assert_eq!(e.get(), None);
+        assert_eq!(e.observe(9.0), 9.0);
+    }
+
+    #[test]
+    fn bucket_index_monotone_and_invertible_lowedge() {
+        let mut prev = 0;
+        for v in [0u64, 1, 5, 31, 32, 33, 63, 64, 100, 1000, 1 << 20, u64::MAX / 2] {
+            let idx = bucket_index(v);
+            assert!(idx >= prev || v < 32, "idx {idx} prev {prev} v {v}");
+            prev = idx;
+            assert!(bucket_low(idx) <= v, "low edge exceeds value for {v}");
+        }
+    }
+
+    #[test]
+    fn histogram_exact_for_small_values() {
+        let mut h = LogHistogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), 31);
+        assert_eq!(h.count(), 32);
+        assert!((h.mean() - 15.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantile_relative_error_bounded() {
+        let mut h = LogHistogram::new();
+        // deterministic exponential-ish spread
+        let mut v;
+        let mut all: Vec<u64> = Vec::new();
+        for i in 0..10_000u64 {
+            v = 1 + (i * i * 37) % 1_000_000;
+            h.record(v);
+            all.push(v);
+        }
+        all.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let exact = all[((q * all.len() as f64).ceil() as usize - 1).min(all.len() - 1)];
+            let approx = h.quantile(q);
+            let rel = (approx as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel < 0.05, "q={q} exact={exact} approx={approx}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        for v in 0..100 {
+            a.record(v);
+        }
+        for v in 100..200 {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.max(), 199);
+        assert_eq!(a.min(), 0);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn summary_exact_percentiles() {
+        let mut s = Summary::new();
+        for v in 1..=100 {
+            s.record(v as f64);
+        }
+        assert_eq!(s.quantile(0.5), 50.0);
+        assert_eq!(s.quantile(0.99), 99.0);
+        assert_eq!(s.quantile(1.0), 100.0);
+        assert_eq!(s.max(), 100.0);
+        assert!((s.mean() - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_std_dev() {
+        let mut s = Summary::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.record(v);
+        }
+        assert!((s.std_dev() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn window_fill_and_reset() {
+        let mut w = Window::new(3);
+        assert!(!w.is_full());
+        assert_eq!(w.mean(), None);
+        w.observe(1.0);
+        w.observe(2.0);
+        assert!(!w.is_full());
+        w.observe(3.0);
+        assert!(w.is_full());
+        assert_eq!(w.mean(), Some(2.0));
+        w.observe(4.0); // evicts 1.0
+        assert_eq!(w.mean(), Some(3.0));
+        w.reset();
+        assert!(!w.is_full());
+        assert_eq!(w.mean(), None);
+    }
+}

@@ -1,0 +1,356 @@
+//! Worker model: one machine of an SGS's worker pool (§4.1, §6).
+//!
+//! Every worker runs an *execution manager* daemon that owns a set of CPU
+//! cores and the worker's sandbox table. The SGS dispatches function
+//! requests to a worker's core; sandbox allocation/eviction requests
+//! arrive from the SGS's sandbox manager. In simulation the execution
+//! manager is this state struct plus completion events; in real-execution
+//! mode (`platform::realtime`) it is a thread pool invoking PJRT
+//! executables through [`crate::runtime`].
+
+use crate::dag::FnId;
+use crate::sandbox::{SandboxError, SandboxTable};
+
+/// Worker index within its SGS pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkerId(pub u16);
+
+/// One worker machine's state.
+#[derive(Debug, Clone)]
+pub struct Worker {
+    pub id: WorkerId,
+    cores_total: u32,
+    cores_busy: u32,
+    pub sandboxes: SandboxTable,
+    alive: bool,
+    /// Incremented on every failure; dispatches carry the epoch they
+    /// started under so completions from a previous life are discarded.
+    epoch: u64,
+}
+
+impl Worker {
+    pub fn new(id: WorkerId, cores: u32, pool_mb: u64) -> Self {
+        Worker {
+            id,
+            cores_total: cores,
+            cores_busy: 0,
+            sandboxes: SandboxTable::new(pool_mb),
+            alive: true,
+            epoch: 0,
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn cores_total(&self) -> u32 {
+        self.cores_total
+    }
+
+    pub fn cores_free(&self) -> u32 {
+        if self.alive {
+            self.cores_total - self.cores_busy
+        } else {
+            0
+        }
+    }
+
+    pub fn has_free_core(&self) -> bool {
+        self.cores_free() > 0
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive
+    }
+
+    /// Occupy a core for a dispatched function.
+    pub fn occupy_core(&mut self) {
+        assert!(self.has_free_core(), "dispatch to a worker with no free core");
+        self.cores_busy += 1;
+    }
+
+    /// Release a core on function completion.
+    pub fn release_core(&mut self) {
+        assert!(self.cores_busy > 0, "core release underflow");
+        self.cores_busy -= 1;
+    }
+
+    /// Fail-stop: drop all state; in-flight requests are the platform's
+    /// problem (§6.1 — the failure detector notifies the SGS which
+    /// updates its cluster view).
+    pub fn fail(&mut self) {
+        self.alive = false;
+        self.cores_busy = 0;
+        self.epoch += 1;
+        let pool = self.sandboxes.pool_total_mb();
+        self.sandboxes = SandboxTable::new(pool);
+    }
+
+    /// Bring a replacement machine online (empty sandbox table).
+    pub fn recover(&mut self) {
+        self.alive = true;
+    }
+
+    /// Can this worker run `f` right now from a warm sandbox?
+    pub fn has_warm(&self, f: FnId) -> bool {
+        self.alive && self.sandboxes.warm_idle(f) > 0
+    }
+
+    /// Can a cold start fit (pool memory available or evictable)?
+    pub fn can_host_cold(&self, mem_mb: u64) -> bool {
+        self.alive
+            && (self.sandboxes.has_pool_mem(mem_mb)
+                || self.evictable_mem_mb() + self.sandboxes.pool_free_mb() >= mem_mb)
+    }
+
+    fn evictable_mem_mb(&self) -> u64 {
+        self.sandboxes
+            .evictable()
+            .map(|(_, count, mem, _, _)| count as u64 * mem)
+            .sum()
+    }
+
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.cores_busy > self.cores_total {
+            return Err(format!(
+                "worker {}: busy {} > total {}",
+                self.id.0, self.cores_busy, self.cores_total
+            ));
+        }
+        self.sandboxes.check_invariants()
+    }
+}
+
+/// A pool of workers under one SGS, with the free-core index the
+/// scheduler's dispatch loop uses.
+#[derive(Debug, Clone)]
+pub struct WorkerPool {
+    pub workers: Vec<Worker>,
+}
+
+impl WorkerPool {
+    pub fn new(count: usize, cores: u32, pool_mb: u64) -> Self {
+        WorkerPool {
+            workers: (0..count)
+                .map(|i| Worker::new(WorkerId(i as u16), cores, pool_mb))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    pub fn get(&self, id: WorkerId) -> &Worker {
+        &self.workers[id.0 as usize]
+    }
+
+    pub fn get_mut(&mut self, id: WorkerId) -> &mut Worker {
+        &mut self.workers[id.0 as usize]
+    }
+
+    pub fn total_free_cores(&self) -> u32 {
+        self.workers.iter().map(|w| w.cores_free()).sum()
+    }
+
+    pub fn any_free_core(&self) -> bool {
+        self.workers.iter().any(|w| w.has_free_core())
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.workers.iter().filter(|w| w.is_alive()).count()
+    }
+
+    /// Total warm-idle sandboxes of `f` across the pool (lottery tickets).
+    pub fn warm_count(&self, f: FnId) -> u32 {
+        self.workers
+            .iter()
+            .filter(|w| w.is_alive())
+            .map(|w| w.sandboxes.warm_idle(f))
+            .sum()
+    }
+
+    /// Total active sandboxes of `f` (for demand reconciliation).
+    pub fn active_count(&self, f: FnId) -> u32 {
+        self.workers
+            .iter()
+            .filter(|w| w.is_alive())
+            .map(|w| w.sandboxes.active(f))
+            .sum()
+    }
+
+    pub fn soft_count(&self, f: FnId) -> u32 {
+        self.workers
+            .iter()
+            .filter(|w| w.is_alive())
+            .map(|w| w.sandboxes.soft(f))
+            .sum()
+    }
+
+    /// Pick the dispatch worker for a ready function request (§4.2: "the
+    /// SGS spreads out sandboxes for a function across its workers to
+    /// maximize the chances that a proactively allocated sandbox will be
+    /// available").
+    ///
+    /// Preference order:
+    /// 1. a free-core worker holding a warm sandbox of `f`;
+    /// 2. a free-core worker where a cold start fits;
+    /// among candidates in the same tier, most free cores wins (load
+    /// spread), ties by lowest id (determinism).
+    pub fn pick_dispatch_worker(&self, f: FnId, mem_mb: u64) -> Option<(WorkerId, bool)> {
+        // keep max free cores; ties go to the lowest worker id
+        let better = |best: &Option<(u32, WorkerId)>, free: u32, id: WorkerId| {
+            best.map_or(true, |(c, bid)| free > c || (free == c && id.0 < bid.0))
+        };
+        let mut best_warm: Option<(u32, WorkerId)> = None;
+        let mut best_cold: Option<(u32, WorkerId)> = None;
+        for w in &self.workers {
+            if !w.is_alive() || !w.has_free_core() {
+                continue;
+            }
+            let free = w.cores_free();
+            if w.has_warm(f) {
+                if better(&best_warm, free, w.id) {
+                    best_warm = Some((free, w.id));
+                }
+            } else if w.can_host_cold(mem_mb) && better(&best_cold, free, w.id) {
+                best_cold = Some((free, w.id));
+            }
+        }
+        if let Some((_, id)) = best_warm {
+            return Some((id, true));
+        }
+        best_cold.map(|(_, id)| (id, false))
+    }
+
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for w in &self.workers {
+            w.check_invariants()?;
+        }
+        Ok(())
+    }
+}
+
+/// Re-exported for callers that match on sandbox errors.
+pub type WorkerSandboxError = SandboxError;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::DagId;
+
+    fn fid(i: u16) -> FnId {
+        FnId {
+            dag: DagId(0),
+            idx: i,
+        }
+    }
+
+    #[test]
+    fn core_accounting() {
+        let mut w = Worker::new(WorkerId(0), 2, 1024);
+        assert_eq!(w.cores_free(), 2);
+        w.occupy_core();
+        w.occupy_core();
+        assert!(!w.has_free_core());
+        w.release_core();
+        assert_eq!(w.cores_free(), 1);
+        w.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "no free core")]
+    fn over_occupancy_panics() {
+        let mut w = Worker::new(WorkerId(0), 1, 1024);
+        w.occupy_core();
+        w.occupy_core();
+    }
+
+    #[test]
+    fn failure_drops_state_and_cores() {
+        let mut w = Worker::new(WorkerId(0), 4, 1024);
+        w.sandboxes.begin_setup(fid(0), 128).unwrap();
+        w.sandboxes.finish_setup(fid(0)).unwrap();
+        w.occupy_core();
+        w.fail();
+        assert!(!w.is_alive());
+        assert_eq!(w.cores_free(), 0);
+        assert!(!w.has_warm(fid(0)));
+        assert_eq!(w.sandboxes.pool_used_mb(), 0);
+        w.recover();
+        assert_eq!(w.cores_free(), 4);
+        assert!(!w.has_warm(fid(0)), "recovered worker starts cold");
+    }
+
+    #[test]
+    fn pool_pick_prefers_warm_sandbox() {
+        let mut p = WorkerPool::new(3, 2, 1024);
+        // warm sandbox only on worker 2
+        p.get_mut(WorkerId(2)).sandboxes.begin_setup(fid(0), 128).unwrap();
+        p.get_mut(WorkerId(2)).sandboxes.finish_setup(fid(0)).unwrap();
+        let (id, warm) = p.pick_dispatch_worker(fid(0), 128).unwrap();
+        assert_eq!(id, WorkerId(2));
+        assert!(warm);
+    }
+
+    #[test]
+    fn pool_pick_falls_back_to_cold_with_most_free_cores() {
+        let mut p = WorkerPool::new(3, 4, 1024);
+        p.get_mut(WorkerId(0)).occupy_core();
+        p.get_mut(WorkerId(2)).occupy_core();
+        let (id, warm) = p.pick_dispatch_worker(fid(1), 128).unwrap();
+        assert_eq!(id, WorkerId(1)); // 4 free cores vs 3
+        assert!(!warm);
+    }
+
+    #[test]
+    fn pool_pick_skips_busy_and_dead_workers() {
+        let mut p = WorkerPool::new(2, 1, 1024);
+        // worker 0 warm but core busy; worker 1 dead
+        p.get_mut(WorkerId(0)).sandboxes.begin_setup(fid(0), 128).unwrap();
+        p.get_mut(WorkerId(0)).sandboxes.finish_setup(fid(0)).unwrap();
+        p.get_mut(WorkerId(0)).occupy_core();
+        p.get_mut(WorkerId(1)).fail();
+        assert!(p.pick_dispatch_worker(fid(0), 128).is_none());
+    }
+
+    #[test]
+    fn pool_pick_none_when_memory_everywhere_exhausted() {
+        let mut p = WorkerPool::new(1, 2, 100);
+        // fill pool with a busy sandbox (not evictable)
+        p.get_mut(WorkerId(0)).sandboxes.acquire_cold(fid(0), 100, 0).unwrap();
+        assert!(p.pick_dispatch_worker(fid(1), 128).is_none());
+    }
+
+    #[test]
+    fn pool_pick_allows_cold_via_evictable_memory() {
+        let mut p = WorkerPool::new(1, 2, 100);
+        let w = p.get_mut(WorkerId(0));
+        w.sandboxes.begin_setup(fid(0), 100).unwrap();
+        w.sandboxes.finish_setup(fid(0)).unwrap();
+        // pool full, but the warm sandbox is evictable
+        let (id, warm) = p.pick_dispatch_worker(fid(1), 100).unwrap();
+        assert_eq!(id, WorkerId(0));
+        assert!(!warm);
+    }
+
+    #[test]
+    fn pool_counts() {
+        let mut p = WorkerPool::new(2, 2, 1024);
+        for wid in [WorkerId(0), WorkerId(1)] {
+            p.get_mut(wid).sandboxes.begin_setup(fid(0), 128).unwrap();
+            p.get_mut(wid).sandboxes.finish_setup(fid(0)).unwrap();
+        }
+        p.get_mut(WorkerId(0)).sandboxes.soft_evict_one(fid(0)).unwrap();
+        assert_eq!(p.warm_count(fid(0)), 1);
+        assert_eq!(p.active_count(fid(0)), 1);
+        assert_eq!(p.soft_count(fid(0)), 1);
+        assert_eq!(p.total_free_cores(), 4);
+        assert_eq!(p.alive_count(), 2);
+    }
+}

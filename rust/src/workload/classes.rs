@@ -1,0 +1,353 @@
+//! The four DAG classes of §7.1 / Table 1.
+//!
+//! | class | shape            | exec (ms) | slack (ms) | W2 RPS / amp / period |
+//! |-------|------------------|-----------|------------|-----------------------|
+//! | C1    | single fn        | 50–100    | 100–150    | 600–1200 / 100–800 / 10–20 s |
+//! | C2    | single fn        | 100–200   | 300–500    | 400–800 / 200–400 / 30–40 s |
+//! | C3    | chain            | 250–400   | 200–300    | 500–1000 / 200–600 / 10–20 s |
+//! | C4    | branched         | 300–600   | 500–1000   | 200 / 0 / ∞ |
+//!
+//! Workload 1 replaces the sinusoids with per-second resampled Poisson
+//! rates (C1 800–1200, C2 600–900, C3 600–800, C4 50–150 RPS). Sandbox
+//! setup overheads are sampled per DAG from 125–400 ms (§7.1); memory is
+//! 128 MB per function (T4).
+
+use crate::config::{Micros, MS, SEC};
+use crate::dag::{DagId, DagSpec, FunctionSpec};
+use crate::util::rng::Rng;
+
+use super::arrival::ArrivalProcess;
+
+/// The four workload classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DagClass {
+    C1,
+    C2,
+    C3,
+    C4,
+}
+
+impl DagClass {
+    pub const ALL: [DagClass; 4] = [DagClass::C1, DagClass::C2, DagClass::C3, DagClass::C4];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DagClass::C1 => "C1",
+            DagClass::C2 => "C2",
+            DagClass::C3 => "C3",
+            DagClass::C4 => "C4",
+        }
+    }
+
+    /// Foreground (user-facing, tight deadline) vs background.
+    pub fn is_foreground(self) -> bool {
+        !matches!(self, DagClass::C4)
+    }
+}
+
+/// Which arrival model drives the run (§7.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Poisson with per-second resampled mean rate.
+    W1,
+    /// Sinusoidal rate modulation.
+    W2,
+}
+
+/// One generated application: a DAG plus its arrival process.
+#[derive(Debug, Clone)]
+pub struct App {
+    pub class: DagClass,
+    pub dag: DagSpec,
+    pub arrivals: ArrivalProcess,
+}
+
+/// Per-function memory footprint (T4: 78% of SAR functions fit 128 MB).
+pub const FN_MEM_MB: u64 = 128;
+
+fn sample_range_us(rng: &mut Rng, lo_ms: u64, hi_ms: u64) -> Micros {
+    rng.range_u64(lo_ms * MS, hi_ms * MS + 1)
+}
+
+/// Sample the per-DAG sandbox setup overhead (125–400 ms, §7.1).
+pub fn sample_setup(rng: &mut Rng) -> Micros {
+    rng.range_u64(125 * MS, 400 * MS + 1)
+}
+
+/// Build one app of `class` (Table 1 sampling). `rate_scale` scales the
+/// arrival rate so multi-DAG runs can hit a target cluster utilization.
+pub fn make_app(
+    class: DagClass,
+    id: DagId,
+    kind: WorkloadKind,
+    rate_scale: f64,
+    rng: &mut Rng,
+) -> App {
+    let setup = sample_setup(rng);
+    let (dag, exec_total) = match class {
+        DagClass::C1 => {
+            let exec = sample_range_us(rng, 50, 100);
+            let slack = sample_range_us(rng, 100, 150);
+            (
+                DagSpec::single(id, &format!("c1-{}", id.0), exec, setup, FN_MEM_MB, exec + slack),
+                exec,
+            )
+        }
+        DagClass::C2 => {
+            let exec = sample_range_us(rng, 100, 200);
+            let slack = sample_range_us(rng, 300, 500);
+            (
+                DagSpec::single(id, &format!("c2-{}", id.0), exec, setup, FN_MEM_MB, exec + slack),
+                exec,
+            )
+        }
+        DagClass::C3 => {
+            // chained functions with 250–400 ms total execution
+            let exec_total = sample_range_us(rng, 250, 400);
+            let slack = sample_range_us(rng, 200, 300);
+            let stages = rng.range_usize(2, 4); // 2–3 functions
+            let per = exec_total / stages as u64;
+            let spec: Vec<(Micros, Micros, u64)> =
+                (0..stages).map(|_| (per, setup, FN_MEM_MB)).collect();
+            (
+                DagSpec::chain(id, &format!("c3-{}", id.0), &spec, per * stages as u64 + slack),
+                per * stages as u64,
+            )
+        }
+        DagClass::C4 => {
+            // branched structure: fan-out then join (batch jobs, §7.1)
+            let exec_total = sample_range_us(rng, 300, 600);
+            let slack = sample_range_us(rng, 500, 1000);
+            let branches = rng.range_usize(2, 4);
+            // root third, branches third (parallel), join third
+            let part = exec_total / 3;
+            let mut functions = vec![FunctionSpec::new("root", part, setup, FN_MEM_MB)];
+            let mut edges = Vec::new();
+            for b in 0..branches {
+                functions.push(FunctionSpec::new(
+                    &format!("branch{b}"),
+                    part,
+                    setup,
+                    FN_MEM_MB,
+                ));
+                edges.push((0u16, (b + 1) as u16));
+            }
+            let join_idx = (branches + 1) as u16;
+            functions.push(FunctionSpec::new("join", part, setup, FN_MEM_MB));
+            for b in 0..branches {
+                edges.push(((b + 1) as u16, join_idx));
+            }
+            let cpl = 3 * part; // root + one branch + join
+            let dag = DagSpec::new(
+                id,
+                &format!("c4-{}", id.0),
+                functions,
+                edges,
+                cpl + slack,
+            )
+            .expect("generated branched dag is valid");
+            (dag, cpl)
+        }
+    };
+    debug_assert_eq!(dag.total_cpl, exec_total);
+
+    let arrivals = match (kind, class) {
+        (WorkloadKind::W1, DagClass::C1) => scaled_resample(rng, 800.0, 1200.0, rate_scale),
+        (WorkloadKind::W1, DagClass::C2) => scaled_resample(rng, 600.0, 900.0, rate_scale),
+        (WorkloadKind::W1, DagClass::C3) => scaled_resample(rng, 600.0, 800.0, rate_scale),
+        (WorkloadKind::W1, DagClass::C4) => scaled_resample(rng, 50.0, 150.0, rate_scale),
+        (WorkloadKind::W2, DagClass::C1) => sin_from_table(rng, 600.0, 1200.0, 100.0, 800.0, 10, 20, rate_scale),
+        (WorkloadKind::W2, DagClass::C2) => sin_from_table(rng, 400.0, 800.0, 200.0, 400.0, 30, 40, rate_scale),
+        (WorkloadKind::W2, DagClass::C3) => sin_from_table(rng, 500.0, 1000.0, 200.0, 600.0, 10, 20, rate_scale),
+        (WorkloadKind::W2, DagClass::C4) => {
+            ArrivalProcess::constant((200.0 * rate_scale).max(0.1))
+        }
+    };
+    App {
+        class,
+        dag,
+        arrivals,
+    }
+}
+
+fn scaled_resample(rng: &mut Rng, lo: f64, hi: f64, scale: f64) -> ArrivalProcess {
+    let _ = rng;
+    ArrivalProcess::resampled((lo * scale).max(0.1), (hi * scale).max(0.2), SEC)
+}
+
+fn sin_from_table(
+    rng: &mut Rng,
+    avg_lo: f64,
+    avg_hi: f64,
+    amp_lo: f64,
+    amp_hi: f64,
+    period_lo_s: u64,
+    period_hi_s: u64,
+    scale: f64,
+) -> ArrivalProcess {
+    let avg = rng.range_f64(avg_lo, avg_hi) * scale;
+    let amp = (rng.range_f64(amp_lo, amp_hi) * scale).min(avg); // amp ≤ avg
+    let period = rng.range_u64(period_lo_s * SEC, period_hi_s * SEC + 1);
+    ArrivalProcess::sinusoid(avg.max(0.1), amp, period)
+}
+
+/// The §7.2 macrobenchmark mix: `dags_per_class` apps of each class.
+pub fn macro_mix(
+    kind: WorkloadKind,
+    dags_per_class: usize,
+    rate_scale: f64,
+    seed: u64,
+) -> Vec<App> {
+    let mut rng = Rng::new(seed);
+    let mut apps = Vec::new();
+    let mut next_id = 0u32;
+    for class in DagClass::ALL {
+        for _ in 0..dags_per_class {
+            let mut stream = rng.fork(next_id as u64);
+            apps.push(make_app(class, DagId(next_id), kind, rate_scale, &mut stream));
+            next_id += 1;
+        }
+    }
+    apps
+}
+
+/// Peak offered CPU load of an app in cores (max rate × total exec).
+/// Used to scale multi-DAG mixes so the cluster stays in the paper's
+/// ~70–110% CPU band (§7.1) instead of overshooting when sinusoid
+/// amplitudes align.
+pub fn peak_offered_cores(app: &App) -> f64 {
+    let peak_rate = match &app.arrivals {
+        ArrivalProcess::Constant { rate } => *rate,
+        ArrivalProcess::Resampled { hi, .. } => *hi,
+        ArrivalProcess::Sinusoid { avg, amplitude, .. } => avg + amplitude,
+        ArrivalProcess::OnOff { rate, .. } => *rate,
+    };
+    let total_exec: f64 = app
+        .dag
+        .functions
+        .iter()
+        .map(|f| f.exec_time as f64 / SEC as f64)
+        .sum();
+    peak_rate * total_exec
+}
+
+/// Mean offered CPU load of an app in cores (rate × total exec).
+pub fn offered_cores(app: &App) -> f64 {
+    let mean_rate = match &app.arrivals {
+        ArrivalProcess::Constant { rate } => *rate,
+        ArrivalProcess::Resampled { lo, hi, .. } => (lo + hi) / 2.0,
+        ArrivalProcess::Sinusoid { avg, .. } => *avg,
+        ArrivalProcess::OnOff { rate, on, off } => {
+            *rate * (*on as f64) / ((*on + *off) as f64)
+        }
+    };
+    let total_exec: f64 = app
+        .dag
+        .functions
+        .iter()
+        .map(|f| f.exec_time as f64 / SEC as f64)
+        .sum();
+    mean_rate * total_exec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c1_c2_single_function_in_table_ranges() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let app = make_app(DagClass::C1, DagId(0), WorkloadKind::W2, 1.0, &mut rng);
+            assert_eq!(app.dag.len(), 1);
+            let exec = app.dag.functions[0].exec_time;
+            assert!((50 * MS..=100 * MS).contains(&exec), "{exec}");
+            let slack = app.dag.slack();
+            assert!((100 * MS..=150 * MS).contains(&slack), "{slack}");
+            let setup = app.dag.functions[0].setup_time;
+            assert!((125 * MS..=400 * MS).contains(&setup), "{setup}");
+
+            let app2 = make_app(DagClass::C2, DagId(1), WorkloadKind::W2, 1.0, &mut rng);
+            let exec2 = app2.dag.functions[0].exec_time;
+            assert!((100 * MS..=200 * MS).contains(&exec2));
+            assert!((300 * MS..=500 * MS).contains(&app2.dag.slack()));
+        }
+    }
+
+    #[test]
+    fn c3_is_chain_with_total_exec_in_range() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let app = make_app(DagClass::C3, DagId(0), WorkloadKind::W2, 1.0, &mut rng);
+            assert!(app.dag.len() >= 2 && app.dag.len() <= 3);
+            // chain: each non-terminal has exactly one child
+            for i in 0..app.dag.len() - 1 {
+                assert_eq!(app.dag.children[i], vec![(i + 1) as u16]);
+            }
+            // total within ±stage rounding of 250–400ms
+            assert!(app.dag.total_cpl >= 240 * MS && app.dag.total_cpl <= 400 * MS);
+            assert!((200 * MS..=300 * MS).contains(&app.dag.slack()));
+        }
+    }
+
+    #[test]
+    fn c4_is_branched_with_constant_arrivals() {
+        let mut rng = Rng::new(3);
+        let app = make_app(DagClass::C4, DagId(0), WorkloadKind::W2, 1.0, &mut rng);
+        assert!(app.dag.len() >= 4, "root + branches + join");
+        assert_eq!(app.dag.roots, vec![0]);
+        // join has multiple parents
+        let join = (app.dag.len() - 1) as usize;
+        assert!(app.dag.parent_count[join] >= 2);
+        assert!(matches!(app.arrivals, ArrivalProcess::Constant { .. }));
+        assert!((500 * MS..=1000 * MS).contains(&app.dag.slack()));
+        assert!(!app.class.is_foreground());
+    }
+
+    #[test]
+    fn w1_uses_resampled_w2_uses_sinusoid() {
+        let mut rng = Rng::new(4);
+        let a1 = make_app(DagClass::C1, DagId(0), WorkloadKind::W1, 1.0, &mut rng);
+        assert!(matches!(a1.arrivals, ArrivalProcess::Resampled { .. }));
+        let a2 = make_app(DagClass::C1, DagId(0), WorkloadKind::W2, 1.0, &mut rng);
+        assert!(matches!(a2.arrivals, ArrivalProcess::Sinusoid { .. }));
+    }
+
+    #[test]
+    fn rate_scale_shrinks_offered_load() {
+        let mut rng = Rng::new(5);
+        let full = make_app(DagClass::C1, DagId(0), WorkloadKind::W2, 1.0, &mut rng);
+        let mut rng = Rng::new(5);
+        let tenth = make_app(DagClass::C1, DagId(0), WorkloadKind::W2, 0.1, &mut rng);
+        let ratio = offered_cores(&tenth) / offered_cores(&full);
+        assert!((ratio - 0.1).abs() < 0.02, "ratio {ratio}");
+    }
+
+    #[test]
+    fn macro_mix_deterministic_and_complete() {
+        let a = macro_mix(WorkloadKind::W2, 2, 1.0, 42);
+        let b = macro_mix(WorkloadKind::W2, 2, 1.0, 42);
+        assert_eq!(a.len(), 8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.dag.name, y.dag.name);
+            assert_eq!(x.dag.deadline, y.dag.deadline);
+        }
+        // ids dense
+        for (i, app) in a.iter().enumerate() {
+            assert_eq!(app.dag.id, DagId(i as u32));
+        }
+        // 2 of each class
+        for class in DagClass::ALL {
+            assert_eq!(a.iter().filter(|x| x.class == class).count(), 2);
+        }
+    }
+
+    #[test]
+    fn offered_cores_sane() {
+        let mut rng = Rng::new(6);
+        let app = make_app(DagClass::C4, DagId(0), WorkloadKind::W2, 1.0, &mut rng);
+        let cores = offered_cores(&app);
+        // 200 RPS × 0.3–0.6s × ~(#fns/3 parallel width ≥ 1) total exec
+        assert!(cores > 50.0 && cores < 450.0, "cores {cores}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generation: arrival processes, the §7.1 DAG classes, and the
+//! synthetic SAR app population for the §2.2 characterization figures.
+
+pub mod arrival;
+pub mod classes;
+pub mod sar;
+
+pub use arrival::ArrivalProcess;
+pub use classes::{macro_mix, make_app, offered_cores, peak_offered_cores, App, DagClass, WorkloadKind};

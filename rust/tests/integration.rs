@@ -1,0 +1,215 @@
+//! Cross-module integration tests: config → DAG spec → platform →
+//! metrics pipelines, baselines on shared workloads, state-store
+//! round-trips, and the experiment registry in quick mode.
+
+use archipelago::baseline::{BaselineKind, BaselineOptions, BaselineSim};
+use archipelago::config::{Config, MS, SEC};
+use archipelago::dag::{parse_dag_json, DagId};
+use archipelago::experiments::{run_one, ExpContext};
+use archipelago::platform::{SimOptions, SimPlatform};
+use archipelago::state_store::StateStore;
+use archipelago::util::json::{self, Json};
+use archipelago::workload::{macro_mix, App, ArrivalProcess, DagClass, WorkloadKind};
+
+fn small_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.cluster.num_sgs = 2;
+    cfg.cluster.workers_per_sgs = 2;
+    cfg.cluster.cores_per_worker = 4;
+    cfg.cluster.proactive_pool_mb = 4 * 1024;
+    cfg
+}
+
+/// The full user journey: JSON config + JSON DAG upload → simulation →
+/// metrics JSON.
+#[test]
+fn config_dag_platform_metrics_pipeline() {
+    let cfg = Config::from_json_str(
+        r#"{"cluster": {"num_sgs": 2, "workers_per_sgs": 2, "cores_per_worker": 4,
+            "proactive_pool_mb": 4096, "worker_mem_mb": 8192}}"#,
+    )
+    .unwrap();
+    let dag = parse_dag_json(
+        DagId(0),
+        r#"{"name": "api", "deadline_us": 300000,
+            "functions": [
+              {"name": "auth", "exec_time_us": 20000, "setup_time_us": 150000, "mem_mb": 128},
+              {"name": "work", "exec_time_us": 60000, "setup_time_us": 200000, "mem_mb": 128}
+            ],
+            "edges": [[0, 1]]}"#,
+    )
+    .unwrap();
+    let apps = vec![App {
+        class: DagClass::C3,
+        dag,
+        arrivals: ArrivalProcess::constant(60.0),
+    }];
+    let opts = SimOptions {
+        seed: 3,
+        horizon: 15 * SEC,
+        warmup: 2 * SEC,
+        ..SimOptions::default()
+    };
+    let mut p = SimPlatform::new(cfg, apps, opts);
+    let row = p.run();
+    assert!(row.completed > 500, "completed {}", row.completed);
+    assert!(row.deadline_met_rate > 0.95, "met {}", row.deadline_met_rate);
+    // E2E must include both stages (80ms nominal, ±5% exec noise)
+    assert!(row.p50 >= 75 * MS, "p50 {}", row.p50);
+    // metrics serialize to valid JSON
+    let j = p.metrics.to_json().to_string();
+    let parsed = json::parse(&j).unwrap();
+    assert_eq!(
+        parsed.get("completed").unwrap().as_u64(),
+        Some(row.completed)
+    );
+}
+
+/// Archipelago beats the FIFO baseline on the same workload + hardware
+/// when the sandbox pool is the binding constraint.
+#[test]
+fn archipelago_beats_baseline_under_churn() {
+    // C1-style mix across 4 classes at moderate scale
+    let apps = macro_mix(WorkloadKind::W2, 1, 0.05, 11);
+    let cfg = small_cfg();
+    let opts = SimOptions {
+        seed: 11,
+        horizon: 30 * SEC,
+        warmup: 8 * SEC,
+        ..SimOptions::default()
+    };
+    let mut arch = SimPlatform::new(cfg.clone(), apps.clone(), opts);
+    let arch_row = arch.run();
+    let bopts = BaselineOptions {
+        kind: BaselineKind::CentralizedFifo,
+        seed: 11,
+        horizon: 30 * SEC,
+        warmup: 8 * SEC,
+        decision_cost: 100,
+        ..BaselineOptions::default()
+    };
+    // baseline gets a realistic (small) warm-container pool
+    let mut base = BaselineSim::new(4, 4, 1024, apps, bopts);
+    let base_row = base.run();
+    assert!(
+        arch_row.deadline_met_rate >= base_row.deadline_met_rate,
+        "arch {} < base {}",
+        arch_row.deadline_met_rate,
+        base_row.deadline_met_rate
+    );
+}
+
+/// SGS/LBS state round-trips through the external store (§6.1).
+#[test]
+fn state_store_roundtrip_for_service_state() {
+    let store = StateStore::new();
+    // LBS state: per-DAG SGS mapping
+    store.put(
+        "lbs/dag/7/active",
+        Json::Arr(vec![Json::Int(1), Json::Int(3)]),
+    );
+    // SGS state: estimates
+    store.put(
+        "sgs/3/estimates/dag7",
+        json::obj(vec![("fn0", Json::Int(42)), ("fn1", Json::Int(17))]),
+    );
+    let snap = store.snapshot();
+    let recovered = StateStore::restore(&snap).unwrap();
+    assert_eq!(
+        recovered.get("lbs/dag/7/active").unwrap().value,
+        Json::Arr(vec![Json::Int(1), Json::Int(3)])
+    );
+    assert_eq!(
+        recovered
+            .get("sgs/3/estimates/dag7")
+            .unwrap()
+            .value
+            .get("fn0")
+            .unwrap()
+            .as_i64(),
+        Some(42)
+    );
+    assert_eq!(recovered.list("sgs/3/").len(), 1);
+}
+
+/// Every registered experiment runs end-to-end in quick mode and writes
+/// its files. (The heavyweight macrobenchmarks are exercised separately
+/// by `cargo bench`.)
+#[test]
+fn experiments_quick_mode_smoke() {
+    let dir = std::env::temp_dir().join("archipelago_exp_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut ctx = ExpContext::new(dir.to_str().unwrap());
+    ctx.quick = true;
+    for id in ["fig1", "fig2abc", "table1", "fig9", "fig12", "fig13"] {
+        let res = run_one(id, &ctx).expect(id);
+        assert!(!res.summary.is_empty(), "{id} summary empty");
+        for f in &res.files {
+            assert!(f.exists(), "{id} did not write {f:?}");
+            let text = std::fs::read_to_string(f).unwrap();
+            assert!(text.lines().count() > 1, "{id} wrote empty csv {f:?}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Determinism across the whole CLI-level pipeline.
+#[test]
+fn platform_determinism_across_workload_kinds() {
+    for kind in [WorkloadKind::W1, WorkloadKind::W2] {
+        let run = || {
+            let apps = macro_mix(kind, 1, 0.02, 5);
+            let opts = SimOptions {
+                seed: 5,
+                horizon: 10 * SEC,
+                warmup: 2 * SEC,
+                ..SimOptions::default()
+            };
+            let mut p = SimPlatform::new(small_cfg(), apps, opts);
+            let row = p.run();
+            (row.completed, row.p50, row.p99, row.cold_starts)
+        };
+        assert_eq!(run(), run(), "{kind:?} nondeterministic");
+    }
+}
+
+/// Failure injection does not corrupt metrics or accounting even when
+/// every SGS except one dies.
+#[test]
+fn cascading_sgs_failures_leave_one_survivor() {
+    let mut cfg = Config::default();
+    cfg.cluster.num_sgs = 4;
+    cfg.cluster.workers_per_sgs = 2;
+    cfg.cluster.cores_per_worker = 4;
+    let apps = vec![App {
+        class: DagClass::C1,
+        dag: archipelago::dag::DagSpec::single(
+            DagId(0),
+            "survivor",
+            30 * MS,
+            150 * MS,
+            128,
+            300 * MS,
+        ),
+        arrivals: ArrivalProcess::constant(50.0),
+    }];
+    let opts = SimOptions {
+        seed: 9,
+        horizon: 20 * SEC,
+        warmup: 2 * SEC,
+        ..SimOptions::default()
+    };
+    let mut p = SimPlatform::new(cfg, apps, opts);
+    use archipelago::sgs::SgsId;
+    p.inject_sgs_failure(4 * SEC, SgsId(0));
+    p.inject_sgs_failure(6 * SEC, SgsId(1));
+    p.inject_sgs_failure(8 * SEC, SgsId(2));
+    let row = p.run();
+    p.check_invariants().unwrap();
+    assert!(row.completed > 250, "completed {}", row.completed);
+    let active = p.lbs().active_sgs(DagId(0));
+    assert!(
+        active.iter().all(|s| s.0 == 3),
+        "only SGS 3 survives: {active:?}"
+    );
+}

@@ -1,0 +1,91 @@
+//! End-to-end tests over the compiled artifacts: the PJRT runtime and
+//! the real-time server. Skipped gracefully when `make artifacts` has
+//! not been run (CI without Python).
+
+use std::path::PathBuf;
+
+use archipelago::config::SchedPolicy;
+use archipelago::platform::realtime::Server;
+use archipelago::runtime::{Input, Manifest, Runtime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn manifest_and_runtime_agree_on_shapes() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let rt = Runtime::load_subset(&dir, &["mlp_infer_b1", "anomaly_score_b4"]).unwrap();
+    for name in ["mlp_infer_b1", "anomaly_score_b4"] {
+        let entry = manifest.entry(name).unwrap();
+        let n: usize = entry.input_shape.iter().product();
+        let input = vec![0.5f32; n];
+        let out = rt.execute(name, Input::F32(&input)).unwrap();
+        assert_eq!(out.len(), entry.output_shapes.len(), "{name}");
+        for (tensor, shape) in out.iter().zip(&entry.output_shapes) {
+            let expected: usize = shape.iter().product::<usize>().max(1);
+            assert_eq!(tensor.len(), expected, "{name} output shape");
+        }
+    }
+}
+
+#[test]
+fn realtime_server_mixed_load_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let server = Server::start(&dir, 2, SchedPolicy::Srsf, &["mlp_infer_b1"]).unwrap();
+    // interleave three models; verify outputs numerically
+    let mut receivers = Vec::new();
+    for i in 0..30 {
+        let rx = match i % 3 {
+            0 => server.submit("mlp_infer_b1", vec![0.1; 256], 100_000),
+            1 => server.submit("anomaly_score_b1", vec![0.2; 128], 400_000),
+            _ => server.submit("mlp_infer_b4", vec![0.3; 4 * 256], 200_000),
+        };
+        receivers.push((i % 3, rx));
+    }
+    for (kind, rx) in receivers {
+        let c = rx.recv().expect("completion");
+        match kind {
+            0 => {
+                let probs = c.outputs[0].as_f32().unwrap();
+                assert_eq!(probs.len(), 10);
+                assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+            }
+            1 => {
+                let score = c.outputs[0].as_f32().unwrap()[0];
+                assert!(score > 0.0 && score < 1.0);
+            }
+            _ => {
+                let probs = c.outputs[0].as_f32().unwrap();
+                assert_eq!(probs.len(), 40);
+            }
+        }
+        assert!(c.exec_us > 0);
+    }
+    // both workers ended up warm for the three models
+    let warm = server.warm_counts();
+    assert!(warm.iter().sum::<usize>() >= 3, "warm sets: {warm:?}");
+    server.shutdown();
+}
+
+#[test]
+fn fifo_policy_server_works_too() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let server = Server::start(&dir, 1, SchedPolicy::Fifo, &["mlp_infer_b1"]).unwrap();
+    let rx1 = server.submit("mlp_infer_b1", vec![0.7; 256], 50_000);
+    let rx2 = server.submit("mlp_infer_b1", vec![0.9; 256], 10_000);
+    // FIFO: first submitted completes first despite looser deadline
+    let c1 = rx1.recv().unwrap();
+    let c2 = rx2.recv().unwrap();
+    assert!(c1.e2e_us <= c2.e2e_us + 500_000, "sanity");
+    server.shutdown();
+}

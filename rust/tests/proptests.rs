@@ -1,0 +1,323 @@
+//! Property-based tests over coordinator invariants, driven by the
+//! in-tree mini property-testing framework (`util::prop`; proptest is
+//! unavailable offline — see DESIGN.md §4).
+//!
+//! Each property generates randomized operation sequences or platform
+//! workloads and asserts structural invariants: conservation of
+//! sandbox-memory accounting, scheduler ordering, routing validity, and
+//! whole-platform bookkeeping after arbitrary fault injections.
+
+use archipelago::config::{
+    Config, EvictionPolicy, PlacementPolicy, SchedPolicy, MS, SEC,
+};
+use archipelago::dag::{DagId, DagSpec, FnId};
+use archipelago::lbs::HashRing;
+use archipelago::platform::{SimOptions, SimPlatform};
+use archipelago::sandbox::SandboxTable;
+use archipelago::sgs::scheduler::{QueuedFn, RequestId, SchedQueue};
+use archipelago::sgs::SgsId;
+use archipelago::util::prop::{check, Gen};
+use archipelago::util::rng::{poisson_inv_cdf, Rng};
+use archipelago::worker::WorkerId;
+use archipelago::workload::{App, ArrivalProcess, DagClass};
+
+fn fid(i: u16) -> FnId {
+    FnId {
+        dag: DagId(0),
+        idx: i,
+    }
+}
+
+/// Sandbox-table accounting survives arbitrary valid operation sequences.
+#[test]
+fn prop_sandbox_table_memory_conservation() {
+    check("sandbox memory conservation", 200, |g: &mut Gen| {
+        let pool = 128 * g.u64(4, 64);
+        let mut t = SandboxTable::new(pool);
+        let nfns = g.usize(1, 6) as u16;
+        for _ in 0..g.usize(10, 120) {
+            let f = fid(g.u64(0, nfns as u64) as u16);
+            match g.u64(0, 7) {
+                0 => {
+                    let _ = t.begin_setup(f, 128);
+                }
+                1 => {
+                    let _ = t.finish_setup(f);
+                }
+                2 => {
+                    let _ = t.acquire_warm(f, g.u64(0, 1000));
+                }
+                3 => {
+                    let _ = t.acquire_cold(f, 128, g.u64(0, 1000));
+                }
+                4 => {
+                    let _ = t.release(f, g.u64(0, 1000));
+                }
+                5 => {
+                    let _ = t.soft_evict_one(f);
+                }
+                6 => {
+                    let _ = t.soft_revive_one(f);
+                }
+                _ => {
+                    let _ = t.hard_evict_one(f);
+                }
+            }
+            t.check_invariants()?;
+            if t.pool_used_mb() > pool {
+                return Err(format!("pool overcommit: {} > {pool}", t.pool_used_mb()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// SRSF pop order is always non-decreasing in the static slack key, and
+/// every pushed element is popped exactly once.
+#[test]
+fn prop_srsf_queue_ordering_and_conservation() {
+    check("srsf ordering + conservation", 200, |g: &mut Gen| {
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        let n = g.usize(1, 120);
+        for i in 0..n {
+            q.push(QueuedFn {
+                req: RequestId(i as u64),
+                f: fid(0),
+                dag: DagId(0),
+                enqueued_at: 0,
+                deadline_abs: g.u64(0, 1_000_000),
+                remaining_work: g.u64(1, 500_000),
+                exec_time: 1000,
+                setup_time: 1000,
+                mem_mb: 128,
+            });
+        }
+        let mut seen = vec![false; n];
+        let mut last_key = i64::MIN;
+        while let Some(item) = q.pop() {
+            let key = item.srsf_key();
+            if key < last_key {
+                return Err(format!("key went backwards: {key} < {last_key}"));
+            }
+            last_key = key;
+            let idx = item.req.0 as usize;
+            if seen[idx] {
+                return Err(format!("request {idx} popped twice"));
+            }
+            seen[idx] = true;
+        }
+        if !seen.iter().all(|s| *s) {
+            return Err("some requests never popped".into());
+        }
+        Ok(())
+    });
+}
+
+/// pop_feasible never loses requests regardless of the predicate.
+#[test]
+fn prop_pop_feasible_conserves_queue() {
+    check("pop_feasible conservation", 150, |g: &mut Gen| {
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        let n = g.usize(1, 60);
+        for i in 0..n {
+            q.push(QueuedFn {
+                req: RequestId(i as u64),
+                f: fid(0),
+                dag: DagId(0),
+                enqueued_at: 0,
+                deadline_abs: g.u64(0, 100_000),
+                remaining_work: g.u64(1, 50_000),
+                exec_time: 10,
+                setup_time: 10,
+                mem_mb: 128,
+            });
+        }
+        let m = g.u64(1, 5);
+        let popped = q.pop_feasible(g.usize(1, 32), |c| c.req.0 % m == 0);
+        let total = q.len() + usize::from(popped.is_some());
+        if total != n {
+            return Err(format!("lost requests: {total} != {n}"));
+        }
+        Ok(())
+    });
+}
+
+/// The hash ring's successor walk visits every SGS exactly once for any
+/// DAG key, and the primary is stable.
+#[test]
+fn prop_hash_ring_walk_is_permutation() {
+    check("ring walk permutation", 100, |g: &mut Gen| {
+        let sgs_count = g.usize(1, 16);
+        let vnodes = g.usize(1, 64);
+        let ring = HashRing::new(sgs_count, vnodes);
+        let key = g.u64(0, u64::MAX - 1);
+        let walk: Vec<SgsId> = ring.successors(key).collect();
+        if walk.len() != sgs_count {
+            return Err(format!("walk length {} != {sgs_count}", walk.len()));
+        }
+        let mut ids: Vec<u16> = walk.iter().map(|s| s.0).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != sgs_count {
+            return Err("walk revisited an SGS".into());
+        }
+        if ring.primary(key) != walk[0] {
+            return Err("primary != first successor".into());
+        }
+        Ok(())
+    });
+}
+
+/// Poisson inverse CDF is monotone in both quantile and rate.
+#[test]
+fn prop_poisson_inv_cdf_monotone() {
+    check("poisson inv cdf monotonicity", 150, |g: &mut Gen| {
+        let lambda = g.f64(0.01, 500.0);
+        let q1 = g.f64(0.5, 0.99);
+        let q2 = (q1 + g.f64(0.0, 0.009)).min(0.9999);
+        let k1 = poisson_inv_cdf(q1, lambda);
+        let k2 = poisson_inv_cdf(q2, lambda);
+        if k2 < k1 {
+            return Err(format!("not monotone in q: {k1} vs {k2}"));
+        }
+        let k3 = poisson_inv_cdf(q1, lambda * 1.5);
+        if k3 < k1 {
+            return Err(format!("not monotone in lambda: {k1} vs {k3}"));
+        }
+        Ok(())
+    });
+}
+
+/// Whole-platform invariant fuzz: random small clusters, random apps,
+/// random fault injections — after the run, core/memory accounting is
+/// intact and sane.
+#[test]
+fn prop_platform_survives_random_scenarios() {
+    check("platform fuzz", 12, |g: &mut Gen| {
+        let mut cfg = Config::default();
+        cfg.cluster.num_sgs = g.usize(1, 4);
+        cfg.cluster.workers_per_sgs = g.usize(1, 4);
+        cfg.cluster.cores_per_worker = g.u64(1, 6) as u32;
+        cfg.cluster.proactive_pool_mb = 128 * g.u64(2, 40);
+        cfg.cluster.worker_mem_mb = cfg.cluster.proactive_pool_mb;
+        cfg.sgs.placement = *g.choose(&[PlacementPolicy::Even, PlacementPolicy::Packed]);
+        cfg.sgs.eviction = *g.choose(&[EvictionPolicy::Fair, EvictionPolicy::Lru]);
+        let n_apps = g.usize(1, 4);
+        let mut apps = Vec::new();
+        for i in 0..n_apps {
+            let exec = g.u64(5, 120) * MS;
+            let setup = g.u64(125, 400) * MS;
+            let deadline = exec + g.u64(50, 800) * MS;
+            let rate = g.f64(5.0, 120.0);
+            let arrivals = if g.bool() {
+                ArrivalProcess::constant(rate)
+            } else {
+                ArrivalProcess::sinusoid(rate, rate * g.f64(0.1, 0.9), g.u64(4, 20) * SEC)
+            };
+            apps.push(App {
+                class: DagClass::C1,
+                dag: if g.bool() {
+                    DagSpec::single(DagId(0), &format!("p{i}"), exec, setup, 128, deadline)
+                } else {
+                    DagSpec::chain(
+                        DagId(0),
+                        &format!("p{i}"),
+                        &[(exec / 2, setup, 128), (exec / 2, setup, 128)],
+                        deadline,
+                    )
+                },
+                arrivals,
+            });
+        }
+        let opts = SimOptions {
+            seed: g.u64(0, u64::MAX - 1),
+            horizon: g.u64(5, 15) * SEC,
+            warmup: SEC,
+            ..SimOptions::default()
+        };
+        let mut p = SimPlatform::new(cfg.clone(), apps, opts);
+        for _ in 0..g.usize(0, 3) {
+            let at = g.u64(1, 10) * SEC;
+            let sgs = SgsId(g.u64(0, cfg.cluster.num_sgs as u64) as u16);
+            if g.bool() {
+                let w = WorkerId(g.u64(0, cfg.cluster.workers_per_sgs as u64) as u16);
+                p.inject_worker_failure(at, sgs, w);
+                if g.bool() {
+                    p.inject_worker_recovery(at + 2 * SEC, sgs, w);
+                }
+            } else if cfg.cluster.num_sgs > 1 {
+                p.inject_sgs_failure(at, sgs);
+            }
+        }
+        let row = p.run();
+        p.check_invariants()?;
+        if row.completed > 0 && row.p50 == 0 {
+            return Err("completed requests with zero latency".into());
+        }
+        Ok(())
+    });
+}
+
+/// Determinism: identical (config, apps, seed) ⇒ identical results.
+#[test]
+fn prop_platform_deterministic() {
+    check("platform determinism", 6, |g: &mut Gen| {
+        let seed = g.u64(0, u64::MAX - 1);
+        let rate = g.f64(20.0, 150.0);
+        let run = || {
+            let mut cfg = Config::default();
+            cfg.cluster.num_sgs = 2;
+            cfg.cluster.workers_per_sgs = 2;
+            cfg.cluster.cores_per_worker = 4;
+            let apps = vec![App {
+                class: DagClass::C1,
+                dag: DagSpec::single(DagId(0), "d", 40 * MS, 200 * MS, 128, 200 * MS),
+                arrivals: ArrivalProcess::constant(rate),
+            }];
+            let opts = SimOptions {
+                seed,
+                horizon: 8 * SEC,
+                warmup: SEC,
+                ..SimOptions::default()
+            };
+            let mut p = SimPlatform::new(cfg, apps, opts);
+            let row = p.run();
+            (
+                row.completed,
+                row.p50,
+                row.p99,
+                row.p999,
+                row.cold_starts,
+                p.events_dispatched(),
+            )
+        };
+        if run() != run() {
+            return Err("nondeterministic run".into());
+        }
+        Ok(())
+    });
+}
+
+/// RNG distribution sanity under random parameters.
+#[test]
+fn prop_rng_distributions_parametric() {
+    check("rng distributions", 60, |g: &mut Gen| {
+        let mut rng = Rng::new(g.u64(0, u64::MAX - 1));
+        let lambda = g.f64(0.1, 50.0);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| rng.exp(lambda)).sum::<f64>() / n as f64;
+        let expected = 1.0 / lambda;
+        if (mean - expected).abs() > expected * 0.1 {
+            return Err(format!("exp mean {mean} vs {expected}"));
+        }
+        let lo = g.u64(0, 1000);
+        let hi = lo + g.u64(1, 1000);
+        for _ in 0..1000 {
+            let v = rng.range_u64(lo, hi);
+            if v < lo || v >= hi {
+                return Err(format!("uniform out of range: {v} not in [{lo},{hi})"));
+            }
+        }
+        Ok(())
+    });
+}
