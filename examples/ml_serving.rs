@@ -29,20 +29,26 @@ fn artifacts_dir() -> PathBuf {
 
 fn main() {
     let dir = artifacts_dir();
-    assert!(
-        dir.join("manifest.json").exists(),
-        "run `make artifacts` first (looked in {dir:?})"
-    );
+    if !dir.join("manifest.json").exists() {
+        eprintln!("no compiled artifacts found (looked in {dir:?})");
+        eprintln!("run `make artifacts` first; real execution also needs the `xla` crate");
+        std::process::exit(2);
+    }
     let workers = 2;
     println!("starting real-time server: {workers} workers, SRSF, prewarm=mlp_infer_b1/b4");
     let t0 = Instant::now();
-    let server = Server::start(
+    let server = match Server::start(
         &dir,
         workers,
         SchedPolicy::Srsf,
         &["mlp_infer_b1", "mlp_infer_b4"],
-    )
-    .expect("server start");
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server start failed: {e}");
+            std::process::exit(2);
+        }
+    };
     println!(
         "  up in {:.2}s ({} artifacts in manifest)",
         t0.elapsed().as_secs_f64(),

@@ -1,4 +1,28 @@
+"""Pytest wiring for the Python (L1/L2 + AOT) layer.
+
+The kernels/model/AOT tests need jax (and friends); CI environments that
+only exercise the Rust control plane don't install it. Skip collection of
+the affected files entirely in that case so `pytest python` stays green
+instead of erroring at import time.
+"""
+
+import importlib.util
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(__file__))
+
+
+def _have(mod: str) -> bool:
+    try:
+        return importlib.util.find_spec(mod) is not None
+    except (ImportError, ValueError):
+        return False
+
+
+collect_ignore_glob = []
+if not (_have("jax") and _have("numpy")):
+    # every test file imports jax/numpy at module scope
+    collect_ignore_glob.append("tests/*")
+elif not _have("hypothesis"):
+    collect_ignore_glob.append("tests/test_kernels.py")

@@ -84,21 +84,34 @@ pub struct DagSpec {
     pub topo: Vec<u16>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum DagError {
-    #[error("dag '{0}' has no functions")]
     Empty(String),
-    #[error("dag '{0}': edge references unknown function {1}")]
     BadEdge(String, u16),
-    #[error("dag '{0}' contains a cycle")]
     Cyclic(String),
-    #[error("dag '{0}': duplicate edge ({1}, {2})")]
     DuplicateEdge(String, u16, u16),
-    #[error("dag '{0}': self edge on {1}")]
     SelfEdge(String, u16),
-    #[error("dag '{0}': deadline must be > 0")]
     ZeroDeadline(String),
 }
+
+impl std::fmt::Display for DagError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DagError::Empty(d) => write!(f, "dag '{d}' has no functions"),
+            DagError::BadEdge(d, i) => {
+                write!(f, "dag '{d}': edge references unknown function {i}")
+            }
+            DagError::Cyclic(d) => write!(f, "dag '{d}' contains a cycle"),
+            DagError::DuplicateEdge(d, p, c) => {
+                write!(f, "dag '{d}': duplicate edge ({p}, {c})")
+            }
+            DagError::SelfEdge(d, i) => write!(f, "dag '{d}': self edge on {i}"),
+            DagError::ZeroDeadline(d) => write!(f, "dag '{d}': deadline must be > 0"),
+        }
+    }
+}
+
+impl std::error::Error for DagError {}
 
 impl DagSpec {
     /// Build + validate a DAG, computing children/roots/critical paths.

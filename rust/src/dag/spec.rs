@@ -22,12 +22,34 @@
 use super::{DagError, DagId, DagSpec, FunctionSpec};
 use crate::util::json;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DagSpecError {
-    #[error("dag json: {0}")]
     Json(String),
-    #[error("dag structure: {0}")]
-    Structure(#[from] DagError),
+    Structure(DagError),
+}
+
+impl std::fmt::Display for DagSpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DagSpecError::Json(m) => write!(f, "dag json: {m}"),
+            DagSpecError::Structure(e) => write!(f, "dag structure: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for DagSpecError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DagSpecError::Structure(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<DagError> for DagSpecError {
+    fn from(e: DagError) -> Self {
+        DagSpecError::Structure(e)
+    }
 }
 
 /// Parse + validate a DAG upload document.

@@ -66,7 +66,7 @@ pub fn fig2abc(ctx: &ExpContext) -> ExpResult {
     let bg: Vec<_> = apps.iter().filter(|a| !a.foreground).collect();
     let med_sne = |set: &[&sar::SarApp]| {
         let mut v: Vec<f64> = set.iter().map(|a| a.sne()).collect();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         if v.is_empty() {
             0.0
         } else {

@@ -198,7 +198,7 @@ pub fn fig8(ctx: &ExpContext) -> ExpResult {
     }
     let pc = ctx.path("fig8b_proactive_vs_ideal.csv");
     csv.write(&pc).unwrap();
-    overprov.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    overprov.sort_by(|a, b| a.total_cmp(b));
     let med_over = overprov.get(overprov.len() / 2).copied().unwrap_or(0.0);
     let p90_over = overprov
         .get((overprov.len() as f64 * 0.9) as usize)

@@ -30,6 +30,8 @@
 //! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`.
 //! * [`experiments`] — one harness per paper table/figure (§7).
 
+#![forbid(unsafe_code)]
+
 pub mod state_store;
 pub mod util;
 

@@ -20,6 +20,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::config::SchedPolicy;
+use crate::runtime::xla;
 use crate::runtime::{Manifest, RuntimeError, Tensor};
 
 /// A serving request: run `artifact` on `input`.

@@ -10,7 +10,10 @@
 //! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
 //! the text parser reassigns ids (see /opt/xla-example/README.md).
 
+pub mod xla;
+
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 
 use crate::util::json::{self, Json};
@@ -40,22 +43,51 @@ pub struct Manifest {
     pub entries: Vec<ArtifactEntry>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("manifest: {0}")]
     Manifest(String),
-    #[error("unknown artifact '{0}'")]
     UnknownArtifact(String),
-    #[error("input shape mismatch for '{name}': expected {expected} elements, got {got}")]
     InputShape {
         name: String,
         expected: usize,
         got: usize,
     },
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeError::Manifest(m) => write!(f, "manifest: {m}"),
+            RuntimeError::UnknownArtifact(n) => write!(f, "unknown artifact '{n}'"),
+            RuntimeError::InputShape {
+                name,
+                expected,
+                got,
+            } => write!(
+                f,
+                "input shape mismatch for '{name}': expected {expected} elements, got {got}"
+            ),
+            RuntimeError::Xla(m) => write!(f, "xla: {m}"),
+            RuntimeError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
 }
 
 impl From<xla::Error> for RuntimeError {

@@ -1,0 +1,134 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The real-execution path ([`crate::runtime`], [`crate::platform::realtime`])
+//! is written against the API surface of the `xla` crate (PJRT CPU client +
+//! HLO-text module loading). That crate links a native `xla_extension`
+//! build and is not available in this offline environment, so this module
+//! provides the same surface with constructors that fail cleanly at
+//! runtime: manifest parsing and everything simulation-side works, while
+//! attempting to actually compile or execute an artifact reports an
+//! explanatory error instead of failing to build. Swapping in the real
+//! bindings means replacing this module with the external crate — no
+//! caller changes.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+const UNAVAILABLE: &str = "xla backend not available in this build (offline stub); \
+     simulation mode is unaffected — link the real `xla` crate for PJRT execution";
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// XLA primitive types the runtime can receive as outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// A host-side literal (input or output tensor).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+
+    pub fn element_type(&self) -> Result<ElementType, Error> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+/// A parsed HLO module (loaded from `artifacts/*.hlo.txt`).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// A computation ready for PJRT compilation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// The PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_cleanly_not_loudly() {
+        let err = PjRtClient::cpu().err().expect("stub must not succeed");
+        assert!(err.to_string().contains("offline stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[0f32]).reshape(&[1]).is_err());
+    }
+}

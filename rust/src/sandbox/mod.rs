@@ -53,15 +53,28 @@ impl SandboxSet {
 
 /// Errors from sandbox-table operations — these indicate caller bugs in
 /// the scheduler, so they're loud.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum SandboxError {
-    #[error("no warm sandbox of {0:?} to acquire")]
     NoWarm(FnId),
-    #[error("no sandbox of {0:?} in state {1}")]
     NoneInState(FnId, &'static str),
-    #[error("pool exhausted: need {need} MB, free {free} MB")]
     PoolExhausted { need: u64, free: u64 },
 }
+
+impl std::fmt::Display for SandboxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SandboxError::NoWarm(id) => write!(f, "no warm sandbox of {id:?} to acquire"),
+            SandboxError::NoneInState(id, state) => {
+                write!(f, "no sandbox of {id:?} in state {state}")
+            }
+            SandboxError::PoolExhausted { need, free } => {
+                write!(f, "pool exhausted: need {need} MB, free {free} MB")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SandboxError {}
 
 /// One worker's sandbox table + proactive memory pool accounting.
 #[derive(Debug, Clone)]

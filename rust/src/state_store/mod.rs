@@ -25,17 +25,33 @@ pub struct Entry {
     pub value: Json,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum StoreError {
-    #[error("version conflict on '{key}': expected {expected}, found {found}")]
     VersionConflict {
         key: String,
         expected: u64,
         found: u64,
     },
-    #[error("corrupt store file: {0}")]
     Corrupt(String),
 }
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::VersionConflict {
+                key,
+                expected,
+                found,
+            } => write!(
+                f,
+                "version conflict on '{key}': expected {expected}, found {found}"
+            ),
+            StoreError::Corrupt(m) => write!(f, "corrupt store file: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
 
 /// The reliable external store. Cheap to clone (shared handle) so every
 /// service holds one, as in the paper's deployment.

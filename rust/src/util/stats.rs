@@ -222,8 +222,10 @@ impl Summary {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples
-                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            // total_cmp is a total order over all f64 values (NaN sorts
+            // after +inf), so a stray NaN sample skews the extreme tail
+            // instead of panicking mid-experiment.
+            self.samples.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
     }
@@ -423,6 +425,24 @@ mod tests {
         assert_eq!(s.quantile(1.0), 100.0);
         assert_eq!(s.max(), 100.0);
         assert!((s.mean() - 50.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_tolerates_nan_samples() {
+        // Regression: `partial_cmp().expect("NaN sample")` used to abort
+        // the whole experiment on a single NaN observation.
+        let mut s = Summary::new();
+        s.record(2.0);
+        s.record(f64::NAN);
+        s.record(1.0);
+        s.record(3.0);
+        assert_eq!(s.quantile(0.0), 1.0);
+        assert!(s.quantile(0.5).is_finite());
+        // NaN sorts last under total_cmp, so it lands at the max slot
+        // rather than corrupting interior percentiles.
+        assert_eq!(s.quantile(0.25), 1.0);
+        assert_eq!(s.quantile(0.75), 3.0);
+        assert!(s.max().is_nan());
     }
 
     #[test]

@@ -1,0 +1,107 @@
+//! Round-trip tests for the hand-rolled JSON layer on the two document
+//! shapes the platform actually loads: platform config files and the DAG
+//! upload language (the shapes `tests/integration.rs` drives end-to-end).
+//! Each shape must survive parse → serialize → parse bit-exactly at the
+//! `Json` value level, and malformed documents must be rejected, not
+//! silently defaulted.
+
+use archipelago::config::{Config, SchedPolicy};
+use archipelago::dag::{parse_dag_json, DagId, DagSpec};
+use archipelago::util::json;
+
+const CONFIG_DOC: &str = r#"{
+  "cluster": {"num_sgs": 4, "workers_per_sgs": 2, "cores_per_worker": 8,
+              "worker_mem_mb": 16384, "proactive_pool_mb": 4096},
+  "sgs": {"sched_policy": "fifo", "placement": "packed", "eviction": "lru",
+          "estimate_interval_us": 50000, "sla_quantile": 0.95},
+  "lbs": {"scale_out_threshold": 0.4, "ring_vnodes": 16,
+          "scale_out_mode": "instant"}
+}"#;
+
+const DAG_DOC: &str = r#"{
+  "name": "pipeline",
+  "deadline_us": 400000,
+  "functions": [
+    {"name": "ingest", "exec_time_us": 30000, "setup_time_us": 150000,
+     "mem_mb": 128, "artifact": "text_featurize_b1"},
+    {"name": "score", "exec_time_us": 50000, "setup_time_us": 250000,
+     "mem_mb": 256}
+  ],
+  "edges": [[0, 1]]
+}"#;
+
+/// parse → serialize → parse is the identity on the Json value.
+#[test]
+fn raw_json_value_roundtrips_on_both_shapes() {
+    for doc in [CONFIG_DOC, DAG_DOC] {
+        let v = json::parse(doc).unwrap();
+        assert_eq!(json::parse(&v.to_string()).unwrap(), v, "compact");
+        assert_eq!(json::parse(&v.to_pretty()).unwrap(), v, "pretty");
+    }
+}
+
+/// Config: document → typed struct → document is stable, and the typed
+/// fields survive the full cycle.
+#[test]
+fn config_roundtrips_through_typed_struct() {
+    let cfg = Config::from_json_str(CONFIG_DOC).unwrap();
+    assert_eq!(cfg.cluster.num_sgs, 4);
+    assert_eq!(cfg.sgs.sched_policy, SchedPolicy::Fifo);
+    assert_eq!(cfg.sgs.estimate_interval, 50_000);
+    let emitted = cfg.to_json();
+    let back = Config::from_json_str(&emitted.to_string()).unwrap();
+    // re-serializing the re-parsed config is a fixed point
+    assert_eq!(back.to_json(), emitted);
+    assert_eq!(back.cluster.workers_per_sgs, cfg.cluster.workers_per_sgs);
+    assert_eq!(back.lbs.ring_vnodes, cfg.lbs.ring_vnodes);
+    assert_eq!(back.sgs.sla_quantile, cfg.sgs.sla_quantile);
+}
+
+/// DAG spec: upload document → DagSpec → document is stable, including
+/// the optional artifact field and the edge list.
+#[test]
+fn dag_spec_roundtrips_through_typed_struct() {
+    let dag = parse_dag_json(DagId(5), DAG_DOC).unwrap();
+    assert_eq!(dag.functions[0].artifact, "text_featurize_b1");
+    assert_eq!(dag.functions[1].mem_mb, 256);
+    assert_eq!(dag.edges, vec![(0, 1)]);
+    let emitted = dag.to_json();
+    let back = parse_dag_json(DagId(5), &emitted.to_string()).unwrap();
+    assert_eq!(back.to_json(), emitted);
+    assert_eq!(back.total_cpl, dag.total_cpl);
+    assert_eq!(back.deadline, dag.deadline);
+    // programmatically built DAGs emit the same language
+    let chain = DagSpec::chain(DagId(0), "c", &[(10, 20, 128), (30, 40, 64)], 100);
+    let chain_back = parse_dag_json(DagId(0), &chain.to_json().to_pretty()).unwrap();
+    assert_eq!(chain_back.to_json(), chain.to_json());
+}
+
+/// Malformed documents are rejected at the right layer with an error,
+/// never silently coerced.
+#[test]
+fn malformed_documents_rejected() {
+    // syntactically broken JSON fails the raw parser
+    for bad in ["{", "{\"a\": }", "[1, 2,]", "{\"a\": 1} trailing", "\"\\u12\""] {
+        assert!(json::parse(bad).is_err(), "{bad:?}");
+    }
+    // syntactically valid but shape-invalid config documents
+    assert!(Config::from_json_str(r#"{"cluster": {"num_sgs": "four"}}"#).is_err());
+    assert!(Config::from_json_str(r#"{"cluster": {"num_sgs": -1}}"#).is_err());
+    assert!(Config::from_json_str(r#"{"sgs": {"sched_policy": "lifo"}}"#).is_err());
+    assert!(Config::from_json_str(r#"{"cluster": {"num_sgs": 0}}"#).is_err());
+    // shape-invalid DAG documents
+    assert!(parse_dag_json(DagId(0), r#"{"deadline_us": 1}"#).is_err());
+    assert!(parse_dag_json(
+        DagId(0),
+        r#"{"name": "x", "deadline_us": 1000, "functions": []}"#
+    )
+    .is_err());
+    assert!(parse_dag_json(
+        DagId(0),
+        r#"{"name": "x", "deadline_us": 1000,
+            "functions": [{"name": "f", "exec_time_us": 1,
+                           "setup_time_us": 1, "mem_mb": 1}],
+            "edges": [[0, 9]]}"#
+    )
+    .is_err());
+}

@@ -142,6 +142,88 @@ fn prop_pop_feasible_conserves_queue() {
     });
 }
 
+/// SRSF audit (§4.2): at any observation time, every request whose
+/// remaining slack has gone negative pops before any request whose slack
+/// is still positive — urgency is never starved by arrival order.
+#[test]
+fn prop_srsf_negative_slack_outranks_positive() {
+    check("srsf negative slack priority", 200, |g: &mut Gen| {
+        let now = g.u64(100_000, 1_000_000);
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        let n = g.usize(2, 100);
+        for i in 0..n {
+            q.push(QueuedFn {
+                req: RequestId(i as u64),
+                f: fid(0),
+                dag: DagId(0),
+                enqueued_at: 0,
+                deadline_abs: g.u64(0, 2 * now),
+                remaining_work: g.u64(1, now),
+                exec_time: 1000,
+                setup_time: 1000,
+                mem_mb: 128,
+            });
+        }
+        let mut seen_positive = false;
+        while let Some(item) = q.pop() {
+            let slack = item.remaining_slack(now);
+            if slack >= 0 {
+                seen_positive = true;
+            } else if seen_positive {
+                return Err(format!(
+                    "negative-slack request {} (slack {slack}) popped after a \
+                     positive-slack one",
+                    item.req.0
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// SRSF tie-break audit: among requests with an identical static SRSF key
+/// (`deadline_abs − remaining_work`), pop order is least remaining work
+/// first, and FIFO (push sequence) within equal work.
+#[test]
+fn prop_srsf_ties_break_by_work_then_fifo() {
+    check("srsf tie-break work-then-fifo", 200, |g: &mut Gen| {
+        let key = g.u64(1_000, 1_000_000);
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        let n = g.usize(2, 60);
+        for i in 0..n {
+            let work = g.u64(1, 8); // small range forces work ties too
+            q.push(QueuedFn {
+                req: RequestId(i as u64), // == push sequence
+                f: fid(0),
+                dag: DagId(0),
+                enqueued_at: 0,
+                // deadline_abs − remaining_work == key for every request
+                deadline_abs: key + work,
+                remaining_work: work,
+                exec_time: 1000,
+                setup_time: 1000,
+                mem_mb: 128,
+            });
+        }
+        let mut last: Option<(u64, u64)> = None;
+        while let Some(item) = q.pop() {
+            if item.srsf_key() != key as i64 {
+                return Err(format!("key drifted: {}", item.srsf_key()));
+            }
+            let cur = (item.remaining_work, item.req.0);
+            if let Some(prev) = last {
+                if cur < prev {
+                    return Err(format!(
+                        "tie-break violated: popped (work, seq) {cur:?} after {prev:?}"
+                    ));
+                }
+            }
+            last = Some(cur);
+        }
+        Ok(())
+    });
+}
+
 /// The hash ring's successor walk visits every SGS exactly once for any
 /// DAG key, and the primary is stable.
 #[test]
