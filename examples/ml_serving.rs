@@ -27,12 +27,78 @@ fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
 }
 
+/// Without artifacts (or the real `xla` crate) the same serving stack
+/// still runs end-to-end: the stub executor stands in for PJRT, and the
+/// shared coordinator schedules a single-function model plus a 3-stage
+/// DAG exactly as it would the compiled artifacts.
+fn stub_demo() {
+    use archipelago::config::MS;
+    use archipelago::dag::{DagId, DagSpec};
+    use archipelago::platform::realtime::RtOptions;
+    use archipelago::runtime::{Manifest, StubExecutorFactory};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let dags = vec![
+        DagSpec::single(DagId(0), "score", 2 * MS, 50 * MS, 128, 200 * MS),
+        DagSpec::chain(
+            DagId(1),
+            "pipeline",
+            &[
+                (2 * MS, 50 * MS, 128),
+                (3 * MS, 50 * MS, 128),
+                (2 * MS, 50 * MS, 128),
+            ],
+            400 * MS,
+        ),
+    ];
+    let factory = Arc::new(StubExecutorFactory {
+        setup_cost: Duration::from_millis(25),
+        exec_cost: Duration::from_millis(2),
+    });
+    let server = Server::start_with(
+        factory,
+        dags,
+        RtOptions::default(),
+        &["score"],
+        Manifest::empty(),
+    )
+    .expect("stub server start");
+    let pipeline = server.dag_id("pipeline").expect("registered");
+    let c = server
+        .submit("score", vec![0.5, 1.5], 200_000)
+        .recv()
+        .expect("completion");
+    println!(
+        "stub single-fn: warm={} e2e={}us output={:?}",
+        !c.cold,
+        c.e2e_us,
+        c.outputs[0].as_f32().unwrap()
+    );
+    let d = server
+        .submit_dag(pipeline, vec![1.0, 2.0], 400_000)
+        .recv()
+        .expect("dag completion");
+    println!(
+        "stub 3-stage DAG: stages={} colds={} e2e={}us met={}",
+        d.functions.len(),
+        d.cold_starts,
+        d.e2e_us,
+        d.deadline_met
+    );
+    println!("{}", server.summary().format_line("realtime (stub)"));
+    server.shutdown();
+    println!("\nOK: coordinator-driven serving ran end-to-end on the stub executor");
+    println!("(run `make artifacts` + link the real `xla` crate for PJRT inference)");
+}
+
 fn main() {
     let dir = artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("no compiled artifacts found (looked in {dir:?})");
-        eprintln!("run `make artifacts` first; real execution also needs the `xla` crate");
-        std::process::exit(2);
+        eprintln!("running the stub-executor demo instead — same scheduling path, fake compute");
+        stub_demo();
+        return;
     }
     let workers = 2;
     println!("starting real-time server: {workers} workers, SRSF, prewarm=mlp_infer_b1/b4");

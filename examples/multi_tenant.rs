@@ -64,7 +64,7 @@ fn main() {
         let ids = [2 * i as u32, 2 * i as u32 + 1];
         let (mut met, mut n, mut cold) = (0u64, 0u64, 0u64);
         for id in ids {
-            if let Some(g) = arch.metrics.per_dag.get(&id) {
+            if let Some(g) = arch.metrics().per_dag.get(&id) {
                 met += g.deadlines_met;
                 n += g.completed;
                 cold += g.cold_starts;

@@ -3,17 +3,26 @@
 //! operations, demand math, and whole-platform simulation throughput
 //! (events/second) — the quantity that bounds how fast macrobenchmarks
 //! regenerate.
+//!
+//! Besides the human-readable report, the run writes `BENCH_hotpath.json`
+//! (per-decision scheduling cost vs. the paper's §7.4 241 µs budget and
+//! simulator events/sec) so perf PRs have an in-repo anchor to diff
+//! against.
 
 use archipelago::config::{Config, SchedPolicy, MS, SEC};
 use archipelago::dag::{DagId, DagSpec, FnId};
+use archipelago::platform::{SimOptions, SimPlatform};
 use archipelago::sandbox::SandboxTable;
 use archipelago::sgs::scheduler::{QueuedFn, RequestId, SchedQueue};
 use archipelago::sim::EventQueue;
-use archipelago::platform::{SimOptions, SimPlatform};
 use archipelago::util::bench::Bench;
+use archipelago::util::json::{self, Json};
 use archipelago::util::rng::{poisson_inv_cdf, Rng};
 use archipelago::workload::{App, ArrivalProcess, DagClass};
 use std::time::Instant;
+
+/// The paper's §7.4 median SGS scheduling-decision cost (Go prototype).
+const PAPER_DECISION_BUDGET_US: f64 = 241.0;
 
 fn main() {
     let bench = Bench::default();
@@ -32,6 +41,7 @@ fn main() {
         q.pop()
     });
     println!("{}", r.report_line());
+    let event_queue_ns = r.median_ns();
 
     // --- SRSF queue at depth 1024 ---
     let mut sq = SchedQueue::new(SchedPolicy::Srsf);
@@ -45,6 +55,8 @@ fn main() {
         sq.pop()
     });
     println!("{}", r.report_line());
+    let srsf_ns = r.median_ns();
+    let srsf_p99_ns = r.p99_ns();
 
     // --- sandbox table acquire/release ---
     let mut table = SandboxTable::new(32 * 1024);
@@ -63,6 +75,7 @@ fn main() {
         table.release(f, now).unwrap();
     });
     println!("{}", r.report_line());
+    let sandbox_ns = r.median_ns();
 
     // --- Poisson inverse CDF at provisioning-typical lambdas ---
     let mut lam = 10.0;
@@ -71,6 +84,7 @@ fn main() {
         poisson_inv_cdf(0.99, lam)
     });
     println!("{}", r.report_line());
+    let poisson_ns = r.median_ns();
 
     // --- whole-platform simulation throughput ---
     let mut cfg = Config::default();
@@ -93,13 +107,39 @@ fn main() {
     let row = p.run();
     let wall = t0.elapsed().as_secs_f64();
     let events = p.events_dispatched();
+    let events_per_sec = events as f64 / wall;
     println!(
-        "sim_throughput: {events} events in {wall:.2}s = {:.0} events/s \
+        "sim_throughput: {events} events in {wall:.2}s = {events_per_sec:.0} events/s \
          ({} completions, {:.0}x real-time)",
-        events as f64 / wall,
         row.completed,
         120.0 / wall,
     );
+
+    // The SRSF push+pop is the dominant per-decision cost of an SGS
+    // scheduling decision; anchor it against the paper's budget.
+    let decision_us = srsf_ns / 1_000.0;
+    let out = json::obj(vec![
+        ("bench", Json::Str("hotpath".into())),
+        ("paper_decision_budget_us", Json::Num(PAPER_DECISION_BUDGET_US)),
+        ("srsf_decision_us_median", Json::Num(decision_us)),
+        ("srsf_decision_us_p99", Json::Num(srsf_p99_ns / 1_000.0)),
+        (
+            "decision_budget_headroom_x",
+            Json::Num(PAPER_DECISION_BUDGET_US / decision_us.max(1e-9)),
+        ),
+        ("event_queue_op_ns_median", Json::Num(event_queue_ns)),
+        ("sandbox_op_ns_median", Json::Num(sandbox_ns)),
+        ("poisson_inv_cdf_ns_median", Json::Num(poisson_ns)),
+        ("sim_events_per_sec", Json::Num(events_per_sec)),
+        ("sim_events_total", Json::Int(events as i64)),
+        ("sim_completions", Json::Int(row.completed as i64)),
+        ("sim_realtime_factor", Json::Num(120.0 / wall)),
+    ]);
+    let path = "BENCH_hotpath.json";
+    match std::fs::write(path, out.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }
 
 fn qf(i: u64, rng: &mut Rng) -> QueuedFn {

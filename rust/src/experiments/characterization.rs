@@ -122,8 +122,14 @@ pub fn fig2d(ctx: &ExpContext) -> ExpResult {
         let row = sim.run();
         (row, sim)
     };
-    let (fifo_row, fifo_sim) = run(BaselineKind::CentralizedFifo);
-    let (sparrow_row, sparrow_sim) = run(BaselineKind::Sparrow { probes: 2 });
+    // Independent baseline stacks; run them on scoped threads.
+    let mut legs = super::par_map(
+        vec![BaselineKind::CentralizedFifo, BaselineKind::Sparrow { probes: 2 }],
+        run,
+    )
+    .into_iter();
+    let (fifo_row, fifo_sim) = legs.next().unwrap();
+    let (sparrow_row, sparrow_sim) = legs.next().unwrap();
     let p_fifo = ctx.path("fig2d_fifo_cdf.csv");
     let p_spar = ctx.path("fig2d_sparrow_cdf.csv");
     write_cdf(&p_fifo, &fifo_sim.metrics.total.e2e).unwrap();

@@ -47,8 +47,6 @@ pub(crate) fn run_macro(ctx: &ExpContext, kind: WorkloadKind, record_series: boo
         record_series,
         ..SimOptions::default()
     };
-    let mut arch_platform = SimPlatform::new(cfg.clone(), apps.clone(), opts);
-    let arch = arch_platform.run();
     let bopts = BaselineOptions {
         kind: BaselineKind::CentralizedFifo,
         seed: ctx.seed,
@@ -57,14 +55,33 @@ pub(crate) fn run_macro(ctx: &ExpContext, kind: WorkloadKind, record_series: boo
         decision_cost: BASELINE_DECISION_US,
         ..BaselineOptions::default()
     };
-    let mut base_sim = BaselineSim::new(
-        cfg.cluster.num_sgs * cfg.cluster.workers_per_sgs,
-        cfg.cluster.cores_per_worker,
-        BASELINE_POOL_MB,
-        apps,
-        bopts,
-    );
-    let base = base_sim.run();
+    // The Archipelago and baseline runs share nothing; overlap them.
+    let (arch_leg, base_leg) = std::thread::scope(|s| {
+        let arch_apps = apps.clone();
+        let arch_cfg = cfg.clone();
+        let arch_h = s.spawn(move || {
+            let mut p = SimPlatform::new(arch_cfg, arch_apps, opts);
+            let row = p.run();
+            (row, p)
+        });
+        let base_h = s.spawn(move || {
+            let mut sim = BaselineSim::new(
+                cfg.cluster.num_sgs * cfg.cluster.workers_per_sgs,
+                cfg.cluster.cores_per_worker,
+                BASELINE_POOL_MB,
+                apps,
+                bopts,
+            );
+            let row = sim.run();
+            (row, sim)
+        });
+        (
+            arch_h.join().expect("archipelago run panicked"),
+            base_h.join().expect("baseline run panicked"),
+        )
+    });
+    let (arch, arch_platform) = arch_leg;
+    let (base, base_sim) = base_leg;
     MacroRun {
         arch,
         base,
@@ -78,7 +95,7 @@ fn class_rows(platform: &SimPlatform) -> String {
     for (ci, class) in DagClass::ALL.iter().enumerate() {
         let (mut met, mut n, mut cold) = (0u64, 0u64, 0u64);
         for id in [2 * ci as u32, 2 * ci as u32 + 1] {
-            if let Some(g) = platform.metrics.per_dag.get(&id) {
+            if let Some(g) = platform.metrics().per_dag.get(&id) {
                 met += g.deadlines_met;
                 n += g.completed;
                 cold += g.cold_starts;
@@ -93,23 +110,27 @@ fn class_rows(platform: &SimPlatform) -> String {
     lines.join("\n")
 }
 
-/// Fig 7: E2E latency CDFs + % deadlines met, both workloads.
+/// Fig 7: E2E latency CDFs + % deadlines met, both workloads (run on
+/// scoped threads — they are independent simulations).
 pub fn fig7(ctx: &ExpContext) -> ExpResult {
     let mut files = Vec::new();
     let mut blocks = Vec::new();
-    for (kind, label, paper_tail, paper_missed) in [
+    let workloads = vec![
         (WorkloadKind::W1, "w1", "20.83x", "0.76% vs 33%"),
         (WorkloadKind::W2, "w2", "35.97x", "0.98% vs 9.66%"),
-    ] {
-        let run = run_macro(ctx, kind, false);
+    ];
+    let legs = super::par_map(workloads, |(kind, label, paper_tail, paper_missed)| {
+        (run_macro(ctx, kind, false), label, paper_tail, paper_missed)
+    });
+    for (run, label, paper_tail, paper_missed) in legs {
         let pa = ctx.path(&format!("fig7_{label}_archipelago_cdf.csv"));
         let pb = ctx.path(&format!("fig7_{label}_baseline_cdf.csv"));
-        write_cdf(&pa, &run.arch_platform.metrics.total.e2e).unwrap();
+        write_cdf(&pa, &run.arch_platform.metrics().total.e2e).unwrap();
         write_cdf(&pb, &run.base_sim.metrics.total.e2e).unwrap();
         let mut met_csv = Csv::new(&["system", "class", "deadline_met_rate"]);
         for (ci, class) in DagClass::ALL.iter().enumerate() {
             for (sys, m) in [
-                ("archipelago", &run.arch_platform.metrics),
+                ("archipelago", run.arch_platform.metrics()),
                 ("baseline", &run.base_sim.metrics),
             ] {
                 let (mut met, mut n) = (0u64, 0u64);
@@ -157,7 +178,7 @@ pub fn fig8(ctx: &ExpContext) -> ExpResult {
     // (a) queuing delay
     let pa = ctx.path("fig8a_arch_qdelay_cdf.csv");
     let pb = ctx.path("fig8a_base_qdelay_cdf.csv");
-    write_cdf(&pa, &run.arch_platform.metrics.total.qdelay).unwrap();
+    write_cdf(&pa, &run.arch_platform.metrics().total.qdelay).unwrap();
     write_cdf(&pb, &run.base_sim.metrics.total.qdelay).unwrap();
     let q_ratio =
         run.base.qdelay_p999 as f64 / run.arch.qdelay_p999.max(1) as f64;

@@ -117,6 +117,29 @@ pub(crate) fn horizon(ctx: &ExpContext, full_secs: u64) -> Micros {
     }
 }
 
+/// Run independent experiment legs on scoped threads, preserving input
+/// order. Sweeps over seeds × configs are separate simulations with no
+/// shared state, so they parallelize trivially; a leg that panics
+/// propagates the panic to the caller.
+pub(crate) fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .into_iter()
+            .map(|item| s.spawn(move || f(item)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("experiment leg panicked"))
+            .collect()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +159,11 @@ mod tests {
     fn run_one_unknown_is_none() {
         let ctx = ExpContext::new("/tmp/archipelago_exp_test");
         assert!(run_one("nope", &ctx).is_none());
+    }
+
+    #[test]
+    fn par_map_preserves_input_order() {
+        let out = par_map((0..32).collect::<Vec<i64>>(), |i| i * i);
+        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<i64>>());
     }
 }

@@ -7,7 +7,7 @@ use crate::platform::{SimOptions, SimPlatform};
 use crate::workload::ArrivalProcess;
 
 use super::characterization::single_fn_app;
-use super::{horizon, ExpContext, ExpResult};
+use super::{horizon, par_map, ExpContext, ExpResult};
 
 fn micro_cfg(num_sgs: usize) -> Config {
     // §7.3: one LB, N SGSs with 10 workers each.
@@ -40,10 +40,11 @@ pub fn fig9(ctx: &ExpContext) -> ExpResult {
         };
         let mut p = SimPlatform::new(cfg, vec![app], opts);
         let row = p.run();
-        (row, p.metrics.interval_met_rates())
+        (row, p.metrics().interval_met_rates())
     };
-    let (even_row, even_series) = run(PlacementPolicy::Even);
-    let (packed_row, packed_series) = run(PlacementPolicy::Packed);
+    let mut legs = par_map(vec![PlacementPolicy::Even, PlacementPolicy::Packed], run).into_iter();
+    let (even_row, even_series) = legs.next().unwrap();
+    let (packed_row, packed_series) = legs.next().unwrap();
     let mut csv = Csv::new(&["interval_s", "even_met_rate", "packed_met_rate"]);
     for (i, (e, p)) in even_series.iter().zip(&packed_series).enumerate() {
         csv.row(&[i.to_string(), format!("{e:.4}"), format!("{p:.4}")]);
@@ -113,8 +114,9 @@ pub fn lru_vs_fair(ctx: &ExpContext) -> ExpResult {
         let colds = p.total_cold_starts();
         (row, colds)
     };
-    let (fair_row, fair_colds) = run(EvictionPolicy::Fair);
-    let (lru_row, lru_colds) = run(EvictionPolicy::Lru);
+    let mut legs = par_map(vec![EvictionPolicy::Fair, EvictionPolicy::Lru], run).into_iter();
+    let (fair_row, fair_colds) = legs.next().unwrap();
+    let (lru_row, lru_colds) = legs.next().unwrap();
     let mut csv = Csv::new(&["policy", "p50_us", "p99_us", "p999_us", "met_rate", "cold_starts"]);
     for (name, row, colds) in [
         ("fair", &fair_row, fair_colds),

@@ -9,7 +9,7 @@ use crate::platform::{SimOptions, SimPlatform};
 use crate::workload::ArrivalProcess;
 
 use super::characterization::single_fn_app;
-use super::{horizon, ExpContext, ExpResult};
+use super::{horizon, par_map, ExpContext, ExpResult};
 
 fn micro_cfg() -> Config {
     let mut cfg = Config::default();
@@ -67,8 +67,11 @@ pub fn fig10(ctx: &ExpContext) -> ExpResult {
         let mean = series.iter().map(|(_, v)| v).sum::<f64>() / series.len() as f64;
         (series, max, mean)
     };
-    let (tight_series, tight_max, tight_mean) = run(50);
-    let (loose_series, loose_max, loose_mean) = run(200);
+    // The two slack legs are independent simulations; run them on
+    // scoped threads.
+    let mut legs = par_map(vec![50u64, 200], run).into_iter();
+    let (tight_series, tight_max, tight_mean) = legs.next().unwrap();
+    let (loose_series, loose_max, loose_mean) = legs.next().unwrap();
     let mut csv = Csv::new(&["time_s", "slack50_sgs", "slack200_sgs"]);
     for i in (0..tight_series.len().min(loose_series.len())).step_by(5) {
         csv.row(&[
@@ -176,8 +179,9 @@ pub fn gradual_vs_instant(ctx: &ExpContext) -> ExpResult {
         let colds = p.total_cold_starts();
         (row, colds)
     };
-    let (grad_row, grad_colds) = run(ScaleOutMode::Gradual);
-    let (inst_row, inst_colds) = run(ScaleOutMode::Instant);
+    let mut legs = par_map(vec![ScaleOutMode::Gradual, ScaleOutMode::Instant], run).into_iter();
+    let (grad_row, grad_colds) = legs.next().unwrap();
+    let (inst_row, inst_colds) = legs.next().unwrap();
     let mut csv = Csv::new(&["mode", "p50_us", "p99_us", "p999_us", "met_rate", "cold_starts"]);
     for (name, row, colds) in [
         ("gradual", &grad_row, grad_colds),

@@ -7,15 +7,15 @@ use crate::platform::{SimOptions, SimPlatform};
 use crate::workload::ArrivalProcess;
 
 use super::characterization::single_fn_app;
-use super::{horizon, ExpContext, ExpResult};
+use super::{horizon, par_map, ExpContext, ExpResult};
 
 /// Fig 12: SOT vs cold starts and tail E2E latency. Low SOT scales out
 /// eagerly (more cold starts); high SOT tolerates queuing (worse tail).
+/// The seven threshold legs are independent simulations and run on
+/// scoped threads.
 pub fn fig12(ctx: &ExpContext) -> ExpResult {
     let sots = [0.05, 0.1, 0.2, 0.3, 0.5, 0.7, 0.9];
-    let mut csv = Csv::new(&["sot", "cold_starts", "p999_us", "met_rate", "scale_outs"]);
-    let mut rows = Vec::new();
-    for &sot in &sots {
+    let legs = par_map(sots.to_vec(), |sot| {
         let mut cfg = Config::default();
         cfg.cluster.num_sgs = 5;
         cfg.cluster.workers_per_sgs = 8;
@@ -37,13 +37,17 @@ pub fn fig12(ctx: &ExpContext) -> ExpResult {
         };
         let mut p = SimPlatform::new(cfg, vec![app], opts);
         let row = p.run();
-        let colds = p.total_cold_starts();
+        (sot, p.total_cold_starts(), row, p.lbs().scale_outs())
+    });
+    let mut csv = Csv::new(&["sot", "cold_starts", "p999_us", "met_rate", "scale_outs"]);
+    let mut rows = Vec::new();
+    for (sot, colds, row, scale_outs) in legs {
         csv.row(&[
             format!("{sot}"),
             colds.to_string(),
             row.p999.to_string(),
             format!("{:.4}", row.deadline_met_rate),
-            p.lbs().scale_outs().to_string(),
+            scale_outs.to_string(),
         ]);
         rows.push((sot, colds, row.p999, row.deadline_met_rate));
     }
@@ -76,9 +80,7 @@ pub fn fig12(ctx: &ExpContext) -> ExpResult {
 /// 20×1 / 10×2 / 5×4 / 1×20 under a sinusoidal single-DAG load.
 pub fn fig13(ctx: &ExpContext) -> ExpResult {
     let partitions = [(20usize, 1usize), (10, 2), (5, 4), (1, 20)];
-    let mut csv = Csv::new(&["num_sgs", "workers_per_sgs", "p999_us", "met_rate", "cold_starts", "scale_outs"]);
-    let mut rows = Vec::new();
-    for &(num_sgs, workers) in &partitions {
+    let legs = par_map(partitions.to_vec(), |(num_sgs, workers)| {
         let mut cfg = Config::default();
         cfg.cluster.num_sgs = num_sgs;
         cfg.cluster.workers_per_sgs = workers;
@@ -98,16 +100,20 @@ pub fn fig13(ctx: &ExpContext) -> ExpResult {
         };
         let mut p = SimPlatform::new(cfg, vec![app], opts);
         let row = p.run();
-        let colds = p.total_cold_starts();
+        (num_sgs, workers, row, p.total_cold_starts(), p.lbs().scale_outs())
+    });
+    let mut csv = Csv::new(&["num_sgs", "workers_per_sgs", "p999_us", "met_rate", "cold_starts", "scale_outs"]);
+    let mut rows = Vec::new();
+    for (num_sgs, workers, row, colds, scale_outs) in legs {
         csv.row(&[
             num_sgs.to_string(),
             workers.to_string(),
             row.p999.to_string(),
             format!("{:.4}", row.deadline_met_rate),
             colds.to_string(),
-            p.lbs().scale_outs().to_string(),
+            scale_outs.to_string(),
         ]);
-        rows.push((num_sgs, workers, row.p999, colds, p.lbs().scale_outs()));
+        rows.push((num_sgs, workers, row.p999, colds, scale_outs));
     }
     let path = ctx.path("fig13_partitioning.csv");
     csv.write(&path).unwrap();

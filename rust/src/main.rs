@@ -202,19 +202,16 @@ fn cmd_figures(raw: &[String]) -> Result<(), CliError> {
 }
 
 fn cmd_serve(raw: &[String]) -> Result<(), CliError> {
-    let cmd = Command::new("serve", "real-time PJRT serving demo")
+    let cmd = Command::new("serve", "real-time serving demo (PJRT or stub executor)")
         .opt("artifacts", "artifact directory (default artifacts)")
         .opt("workers", "worker threads (default 2)")
         .opt("requests", "demo requests to push (default 200)")
-        .opt("policy", "srsf | fifo (default srsf)");
+        .opt("policy", "srsf | fifo (default srsf)")
+        .flag(
+            "stub",
+            "serve demo DAGs on the stub executor (no artifacts or xla needed)",
+        );
     let args = cmd.parse(raw)?;
-    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
-    if !dir.join("manifest.json").exists() {
-        return Err(CliError(format!(
-            "no manifest in {} — run `make artifacts` first",
-            dir.display()
-        )));
-    }
     let workers = args.get_u64("workers", 2)? as usize;
     let n = args.get_u64("requests", 200)?;
     let policy = match args.get_or("policy", "srsf") {
@@ -222,6 +219,16 @@ fn cmd_serve(raw: &[String]) -> Result<(), CliError> {
         "fifo" => SchedPolicy::Fifo,
         other => return Err(CliError(format!("--policy must be srsf|fifo, got '{other}'"))),
     };
+    if args.has("stub") {
+        return serve_stub_demo(workers, n, policy);
+    }
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    if !dir.join("manifest.json").exists() {
+        return Err(CliError(format!(
+            "no manifest in {} — run `make artifacts` first, or pass --stub",
+            dir.display()
+        )));
+    }
     println!("starting server: {workers} workers, {policy:?}");
     let server = Server::start(&dir, workers, policy, &["mlp_infer_b1"])
         .map_err(|e| CliError(e.to_string()))?;
@@ -241,6 +248,87 @@ fn cmd_serve(raw: &[String]) -> Result<(), CliError> {
         lat.quantile(0.5),
         lat.quantile(0.99),
         n as f64 / wall
+    );
+    server.shutdown();
+    Ok(())
+}
+
+/// `serve --stub`: the wall-clock platform end-to-end — single-function
+/// and 3-stage DAG requests through the shared coordinator — with the
+/// stub executor standing in for PJRT.
+fn serve_stub_demo(workers: usize, n: u64, policy: SchedPolicy) -> Result<(), CliError> {
+    use archipelago::config::MS;
+    use archipelago::dag::{DagId, DagSpec};
+    use archipelago::platform::realtime::RtOptions;
+    use archipelago::runtime::{Manifest, StubExecutorFactory};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let dags = vec![
+        DagSpec::single(DagId(0), "score", 2 * MS, 50 * MS, 128, 200 * MS),
+        DagSpec::chain(
+            DagId(1),
+            "pipeline",
+            &[
+                (2 * MS, 50 * MS, 128),
+                (3 * MS, 50 * MS, 128),
+                (2 * MS, 50 * MS, 128),
+            ],
+            400 * MS,
+        ),
+    ];
+    let factory = Arc::new(StubExecutorFactory {
+        setup_cost: Duration::from_millis(20),
+        exec_cost: Duration::from_millis(2),
+    });
+    let opts = RtOptions {
+        workers,
+        policy,
+        ..RtOptions::default()
+    };
+    println!("starting stub server: {workers} workers, {policy:?}, DAGs: score, pipeline(3)");
+    let server = Server::start_with(factory, dags, opts, &["score"], Manifest::empty())
+        .map_err(|e| CliError(e.to_string()))?;
+    let pipeline = server
+        .dag_id("pipeline")
+        .expect("pipeline DAG registered above");
+    let t0 = std::time::Instant::now();
+    let mut single_lat = archipelago::util::stats::Summary::new();
+    let mut dag_lat = archipelago::util::stats::Summary::new();
+    let mut met = 0u64;
+    for i in 0..n {
+        if i % 4 == 0 {
+            let rx = server.submit_dag(pipeline, vec![i as f32, 1.0], 400_000);
+            let c = rx.recv().map_err(|e| CliError(e.to_string()))?;
+            dag_lat.record(c.e2e_us as f64);
+            met += u64::from(c.deadline_met);
+            assert_eq!(c.functions.len(), 3, "all three stages must run");
+        } else {
+            let rx = server.submit("score", vec![i as f32, 2.0], 200_000);
+            let c = rx.recv().map_err(|e| CliError(e.to_string()))?;
+            single_lat.record(c.e2e_us as f64);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "single-fn : p50={:.0}us p99={:.0}us",
+        single_lat.quantile(0.5),
+        single_lat.quantile(0.99)
+    );
+    println!(
+        "3-fn DAG  : p50={:.0}us p99={:.0}us | deadlines met {met}/{}",
+        dag_lat.quantile(0.5),
+        dag_lat.quantile(0.99),
+        (n + 3) / 4
+    );
+    println!(
+        "{}",
+        server.summary().format_line("realtime (stub)")
+    );
+    println!(
+        "served {n} requests in {wall:.2}s ({:.0} req/s) | cold starts {}",
+        n as f64 / wall,
+        server.total_cold_starts()
     );
     server.shutdown();
     Ok(())

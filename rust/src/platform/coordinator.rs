@@ -1,0 +1,688 @@
+//! The driver-agnostic coordinator core (DESIGN.md §Coordinator).
+//!
+//! The paper's central claim is that one scheduling architecture
+//! (LBS → SGS → worker pool, §3 Fig 3) serves both as a simulated
+//! cluster and a real deployment. This module is that architecture with
+//! time abstracted out: the request table, DAG fan-out on completion,
+//! the warm-aware dispatch drain, and §6.1 failure re-routing all live
+//! here, and every method takes `now` and appends [`Effect`]s to a
+//! buffer instead of scheduling events or spawning work itself.
+//!
+//! A *driver* owns the clock and turns effects into its own notion of
+//! time: the discrete-event engine ([`super::SimPlatform`]) maps
+//! `Dispatched { dispatch.finish_at }` to a future `FnComplete` event,
+//! while the wall-clock runtime ([`super::realtime`]) hands the same
+//! effect to a worker thread and calls [`Coordinator::fn_complete`]
+//! when the real execution returns. Both exercise the identical
+//! scheduling code, so a policy change lands in one place.
+
+use crate::config::{Config, Micros};
+use crate::dag::{DagId, DagRegistry, FnId};
+use crate::lbs::{Lbs, ScaleAction, SgsReport};
+use crate::metrics::{Metrics, RequestOutcome};
+use crate::sgs::{QueuedFn, RequestId, Sgs, SgsId};
+use crate::util::fasthash::FastMap;
+use crate::worker::WorkerId;
+
+/// An instruction from the coordinator to its driver. Effects are
+/// appended in a deterministic order; drivers must apply them in that
+/// order (the discrete-event engine's determinism depends on it).
+#[derive(Debug, Clone)]
+pub enum Effect {
+    /// Deliver `queued` to `sgs` at absolute time `at` (a routing hop:
+    /// the LBS decision plus its network overhead).
+    Enqueue {
+        at: Micros,
+        sgs: SgsId,
+        queued: QueuedFn,
+        is_root: bool,
+    },
+    /// A function started on `dispatch.worker`; in virtual time it
+    /// finishes at `dispatch.finish_at`, in wall-clock time whenever the
+    /// executor returns. `epoch` guards against completions from a
+    /// worker that failed and was replaced mid-flight.
+    Dispatched {
+        sgs: SgsId,
+        epoch: u64,
+        dispatch: crate::sgs::Dispatch,
+    },
+    /// A proactive sandbox setup began; it becomes warm at
+    /// `setup.done_at` (virtual) or when the executor finishes compiling
+    /// (wall-clock), at which point the driver calls
+    /// [`Coordinator::setup_done`].
+    SetupStarted {
+        sgs: SgsId,
+        epoch: u64,
+        setup: crate::sgs::SetupStart,
+    },
+    /// The whole request finished. Metrics were already recorded; the
+    /// real-time driver uses this to reply to the caller.
+    RequestDone {
+        req: RequestId,
+        outcome: RequestOutcome,
+    },
+}
+
+/// Per-request in-flight bookkeeping (the request table).
+#[derive(Debug)]
+pub struct RequestState {
+    pub dag: DagId,
+    pub arrival: Micros,
+    pub deadline_abs: Micros,
+    /// Home SGS; downstream functions run here (§4.2 DAG awareness).
+    pub sgs: SgsId,
+    /// Outstanding parent count per function.
+    pending_parents: Vec<u16>,
+    /// Functions not yet completed.
+    remaining: usize,
+    pub cold_starts: u32,
+    /// Sampled execution time per function for this request.
+    exec_times: Vec<Micros>,
+}
+
+/// The platform-agnostic scheduling core: LBS + SGSs + request table.
+pub struct Coordinator {
+    pub cfg: Config,
+    pub registry: DagRegistry,
+    pub lbs: Lbs,
+    pub sgss: Vec<Sgs>,
+    pub metrics: Metrics,
+    requests: FastMap<u64, RequestState>,
+    next_req: u64,
+    /// Completions before this time are excluded from metrics.
+    warmup: Micros,
+    /// Reused dispatch buffer (hot path, avoids per-event allocation).
+    dispatch_buf: Vec<crate::sgs::Dispatch>,
+}
+
+impl Coordinator {
+    /// Build the core over an already-populated DAG registry.
+    pub fn new(cfg: Config, registry: DagRegistry, warmup: Micros, seed: u64) -> Self {
+        cfg.validate().expect("invalid config");
+        let sgss: Vec<Sgs> = (0..cfg.cluster.num_sgs)
+            .map(|i| {
+                Sgs::new(
+                    SgsId(i as u16),
+                    cfg.cluster.workers_per_sgs,
+                    cfg.cluster.cores_per_worker,
+                    cfg.cluster.proactive_pool_mb,
+                    cfg.sgs.clone(),
+                )
+            })
+            .collect();
+        let lbs = Lbs::new(cfg.lbs.clone(), cfg.cluster.num_sgs, seed);
+        Coordinator {
+            registry,
+            lbs,
+            sgss,
+            metrics: Metrics::new(),
+            requests: FastMap::default(),
+            next_req: 0,
+            warmup,
+            cfg,
+            dispatch_buf: Vec::new(),
+        }
+    }
+
+    /// Register every DAG in the registry with the LBS (bootstrap).
+    pub fn register_all_dags(&mut self) {
+        let ids: Vec<DagId> = self.registry.iter().map(|d| d.id).collect();
+        for id in ids {
+            self.lbs.register_dag(id);
+        }
+    }
+
+    pub fn sgs(&self, id: SgsId) -> &Sgs {
+        &self.sgss[id.0 as usize]
+    }
+
+    pub fn sgs_count(&self) -> usize {
+        self.sgss.len()
+    }
+
+    pub fn total_cold_starts(&self) -> u64 {
+        self.sgss.iter().map(|s| s.cold_starts()).sum()
+    }
+
+    /// Requests currently in flight.
+    pub fn inflight(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn request(&self, req: RequestId) -> Option<&RequestState> {
+        self.requests.get(&req.0)
+    }
+
+    /// Admit a new request for `dag_id`: allocate it in the request
+    /// table, route it through the LBS, and emit `Enqueue` effects for
+    /// the DAG's root functions after the routing overhead.
+    ///
+    /// `exec_times` holds the per-function execution-time estimates for
+    /// this request (the simulator samples them with noise; the
+    /// real-time driver passes the spec estimates). `deadline` overrides
+    /// the DAG's default relative deadline when given (real-time callers
+    /// carry per-request deadlines).
+    pub fn admit(
+        &mut self,
+        now: Micros,
+        dag_id: DagId,
+        exec_times: Vec<Micros>,
+        deadline: Option<Micros>,
+        fx: &mut Vec<Effect>,
+    ) -> RequestId {
+        let dag = self.registry.get(dag_id);
+        debug_assert_eq!(exec_times.len(), dag.len());
+        let req_id = RequestId(self.next_req);
+        self.next_req += 1;
+        let mut state = RequestState {
+            dag: dag_id,
+            arrival: now,
+            deadline_abs: now + deadline.unwrap_or(dag.deadline),
+            sgs: SgsId(0), // set below
+            pending_parents: dag.parent_count.clone(),
+            remaining: dag.len(),
+            cold_starts: 0,
+            exec_times,
+        };
+        // Route (the paper's per-request LBS decision).
+        let sgs = self.lbs.route(dag_id);
+        state.sgs = sgs;
+        // Enqueue the roots after the routing overhead.
+        let enqueue_at = now + self.cfg.lbs.route_overhead;
+        for &root in &self.registry.get(dag_id).roots {
+            let queued = self.make_queued(&state, req_id, dag_id, root, enqueue_at);
+            fx.push(Effect::Enqueue {
+                at: enqueue_at,
+                sgs,
+                queued,
+                is_root: true,
+            });
+        }
+        self.requests.insert(req_id.0, state);
+        req_id
+    }
+
+    fn make_queued(
+        &self,
+        state: &RequestState,
+        req: RequestId,
+        dag_id: DagId,
+        fn_idx: u16,
+        enqueued_at: Micros,
+    ) -> QueuedFn {
+        let dag = self.registry.get(dag_id);
+        let spec = &dag.functions[fn_idx as usize];
+        QueuedFn {
+            req,
+            f: dag.fn_id(fn_idx),
+            dag: dag_id,
+            enqueued_at,
+            deadline_abs: state.deadline_abs,
+            remaining_work: dag.cpl[fn_idx as usize],
+            exec_time: state.exec_times[fn_idx as usize],
+            setup_time: spec.setup_time,
+            mem_mb: spec.mem_mb,
+        }
+    }
+
+    /// A routed request (or a ready downstream function) reached its
+    /// SGS: enqueue it and drain the dispatch loop. A dead SGS reroutes
+    /// the function through the LBS (§6.1).
+    pub fn enqueue(
+        &mut self,
+        now: Micros,
+        sgs: SgsId,
+        queued: QueuedFn,
+        is_root: bool,
+        fx: &mut Vec<Effect>,
+    ) {
+        let s = &mut self.sgss[sgs.0 as usize];
+        if !s.is_alive() {
+            // Failure between routing and enqueue: reroute through LBS.
+            let dag = queued.dag;
+            let alt = self.lbs.route(dag);
+            if alt != sgs {
+                fx.push(Effect::Enqueue {
+                    at: now + self.cfg.lbs.route_overhead,
+                    sgs: alt,
+                    queued,
+                    is_root,
+                });
+            }
+            return;
+        }
+        s.enqueue(queued, is_root);
+        self.dispatch(now, sgs, fx);
+    }
+
+    /// Run the SGS dispatch loop and emit `Dispatched` effects.
+    fn dispatch(&mut self, now: Micros, sgs: SgsId, fx: &mut Vec<Effect>) {
+        let s = &mut self.sgss[sgs.0 as usize];
+        let mut dispatches = std::mem::take(&mut self.dispatch_buf);
+        s.try_dispatch_into(now, &mut dispatches);
+        for d in dispatches.drain(..) {
+            let epoch = s.pool.get(d.worker).epoch();
+            if now >= self.warmup {
+                self.metrics.record_qdelay(d.f.dag, d.queue_delay);
+            }
+            if let Some(state) = self.requests.get_mut(&d.req.0) {
+                state.cold_starts += u32::from(d.cold);
+            }
+            fx.push(Effect::Dispatched {
+                sgs,
+                epoch,
+                dispatch: d,
+            });
+        }
+        self.dispatch_buf = dispatches;
+    }
+
+    /// A dispatched function finished on a worker. Advances the
+    /// request's DAG: emits `Enqueue` effects for ready children, a
+    /// `RequestDone` effect when the sink completed, and new
+    /// `Dispatched` effects for the freed core. A stale `epoch` (the
+    /// worker failed while the function ran) re-enqueues the function
+    /// instead (at-least-once semantics).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fn_complete(
+        &mut self,
+        now: Micros,
+        sgs: SgsId,
+        worker: WorkerId,
+        epoch: u64,
+        req: RequestId,
+        f: FnId,
+        fx: &mut Vec<Effect>,
+    ) {
+        let s = &mut self.sgss[sgs.0 as usize];
+        let current_epoch = s.pool.get(worker).epoch();
+        if current_epoch != epoch || !s.pool.get(worker).is_alive() {
+            // The worker died while this function ran: the execution is
+            // lost; re-enqueue the function (at-least-once semantics).
+            if self.requests.contains_key(&req.0) {
+                let state = &self.requests[&req.0];
+                let queued = self.make_queued(state, req, state.dag, f.idx, now);
+                let target = state.sgs;
+                fx.push(Effect::Enqueue {
+                    at: now,
+                    sgs: target,
+                    queued,
+                    is_root: false,
+                });
+            }
+            return;
+        }
+        s.complete(worker, f, now);
+
+        // Advance the request's DAG.
+        let mut finished = false;
+        let mut children_ready: Vec<u16> = Vec::new();
+        if let Some(state) = self.requests.get_mut(&req.0) {
+            state.remaining -= 1;
+            finished = state.remaining == 0;
+            let dag = self.registry.get(state.dag);
+            for &c in &dag.children[f.idx as usize] {
+                state.pending_parents[c as usize] -= 1;
+                if state.pending_parents[c as usize] == 0 {
+                    children_ready.push(c);
+                }
+            }
+        }
+        if finished {
+            let state = self
+                .requests
+                .remove(&req.0)
+                .expect("finished implies present");
+            let outcome = RequestOutcome {
+                dag: state.dag,
+                arrival: state.arrival,
+                completion: now,
+                deadline_abs: state.deadline_abs,
+                cold_starts: state.cold_starts,
+            };
+            if now >= self.warmup {
+                self.metrics.record_completion(&outcome);
+            }
+            fx.push(Effect::RequestDone { req, outcome });
+        } else if !children_ready.is_empty() {
+            let state = &self.requests[&req.0];
+            // Downstream functions run at the same SGS — §4.2: "As an SGS
+            // is DAG aware, it schedules functions once their
+            // dependencies are met."
+            let target = state.sgs;
+            for c in children_ready {
+                let queued = self.make_queued(state, req, state.dag, c, now);
+                fx.push(Effect::Enqueue {
+                    at: now,
+                    sgs: target,
+                    queued,
+                    is_root: false,
+                });
+            }
+        }
+        // The freed core may admit more queued work.
+        self.dispatch(now, sgs, fx);
+    }
+
+    /// A proactive sandbox setup completed: the sandbox becomes warm and
+    /// may convert a would-be-cold dispatch. Stale epochs are dropped
+    /// (the sandbox was lost with the worker).
+    pub fn setup_done(
+        &mut self,
+        now: Micros,
+        sgs: SgsId,
+        worker: WorkerId,
+        epoch: u64,
+        f: FnId,
+        fx: &mut Vec<Effect>,
+    ) {
+        let s = &mut self.sgss[sgs.0 as usize];
+        if s.pool.get(worker).epoch() != epoch {
+            return; // worker failed mid-setup; sandbox lost
+        }
+        s.setup_done(worker, f);
+        self.dispatch(now, sgs, fx);
+    }
+
+    /// Periodic estimation at one SGS (§4.3.1): recompute demand,
+    /// reconcile sandbox allocations (emitting `SetupStarted` effects),
+    /// and piggyback per-DAG reports to the LBS (§5.2.1). A dead SGS is
+    /// a no-op.
+    pub fn estimator_tick(&mut self, now: Micros, sgs: SgsId, fx: &mut Vec<Effect>) {
+        if !self.sgss[sgs.0 as usize].is_alive() {
+            return;
+        }
+        let setups = {
+            let s = &mut self.sgss[sgs.0 as usize];
+            s.estimator_tick(now, &self.registry)
+        };
+        self.emit_setups(sgs, &setups, fx);
+        let tracked = self.sgss[sgs.0 as usize].estimator.tracked();
+        for dag_id in tracked {
+            let s = &self.sgss[sgs.0 as usize];
+            let dag = self.registry.get(dag_id);
+            let report = SgsReport {
+                sgs,
+                sandboxes: s.dag_sandbox_count(dag),
+                qdelay_us: s.estimator.qdelay(dag_id).unwrap_or(0.0),
+                window_full: s.estimator.qdelay_window_full(dag_id),
+            };
+            self.lbs.update_report(dag_id, report);
+        }
+    }
+
+    fn emit_setups(&mut self, sgs: SgsId, setups: &[crate::sgs::SetupStart], fx: &mut Vec<Effect>) {
+        for su in setups {
+            let epoch = self.sgss[sgs.0 as usize].pool.get(su.worker).epoch();
+            fx.push(Effect::SetupStarted {
+                sgs,
+                epoch,
+                setup: *su,
+            });
+        }
+    }
+
+    /// Periodic LBS scaling evaluation (§5.2, Pseudocode 2): apply the
+    /// scale-out/in/drop actions, emitting `SetupStarted` effects for
+    /// scale-out priming.
+    pub fn lbs_control(&mut self, now: Micros, fx: &mut Vec<Effect>) {
+        let dag_ids: Vec<DagId> = self.registry.iter().map(|d| d.id).collect();
+        for dag_id in dag_ids {
+            let slack = self.registry.get(dag_id).slack();
+            let actions = self.lbs.control_tick(dag_id, slack);
+            for action in actions {
+                match action {
+                    ScaleAction::Out {
+                        dag,
+                        sgs,
+                        prime_target,
+                        expected_rate,
+                    } => {
+                        let setups = self.sgss[sgs.0 as usize].prime_dag(
+                            now,
+                            dag,
+                            prime_target,
+                            expected_rate,
+                            &self.registry,
+                        );
+                        self.emit_setups(sgs, &setups, fx);
+                    }
+                    ScaleAction::In { .. } => {
+                        // Gradual drain: the SGS keeps serving discounted
+                        // lottery traffic; its estimator decays demand.
+                    }
+                    ScaleAction::Drop { dag, sgs } => {
+                        self.sgss[sgs.0 as usize].release_dag(dag, &self.registry);
+                    }
+                    ScaleAction::ResetWindows { dag } => {
+                        let mut members: Vec<SgsId> = self.lbs.active_sgs(dag).to_vec();
+                        members.extend(self.lbs.removed_sgs(dag));
+                        for sgs in members {
+                            self.sgss[sgs.0 as usize].estimator.reset_qdelay_window(dag);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fail-stop a worker (§6.1): in-flight completions on it will carry
+    /// a stale epoch and be re-enqueued by [`Self::fn_complete`].
+    pub fn fail_worker(&mut self, sgs: SgsId, worker: WorkerId) {
+        self.sgss[sgs.0 as usize].fail_worker(worker);
+    }
+
+    pub fn recover_worker(&mut self, sgs: SgsId, worker: WorkerId) {
+        self.sgss[sgs.0 as usize].recover_worker(worker);
+    }
+
+    /// Fail-stop an SGS (§6.1: state recovers from the external store;
+    /// queued requests are re-routed through the LBS). Emits `Enqueue`
+    /// effects for the orphaned queue contents.
+    pub fn sgs_fail(&mut self, now: Micros, sgs: SgsId, fx: &mut Vec<Effect>) {
+        let orphaned = self.sgss[sgs.0 as usize].fail();
+        self.lbs.remove_sgs(sgs);
+        for queued in orphaned {
+            let dag = queued.dag;
+            let alt = self.lbs.route(dag);
+            // Requests whose home SGS died move entirely.
+            if let Some(state) = self
+                .requests
+                .values_mut()
+                .find(|r| r.sgs == sgs && r.dag == dag)
+            {
+                state.sgs = alt;
+            }
+            fx.push(Effect::Enqueue {
+                at: now + self.cfg.lbs.route_overhead,
+                sgs: alt,
+                queued,
+                is_root: false,
+            });
+        }
+        // Reassign home SGS for all in-flight requests of the dead SGS.
+        let reassign: Vec<u64> = self
+            .requests
+            .iter()
+            .filter(|(_, r)| r.sgs == sgs)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in reassign {
+            let dag = self.requests[&id].dag;
+            let alt = self.lbs.route(dag);
+            self.requests.get_mut(&id).unwrap().sgs = alt;
+        }
+    }
+
+    /// Whole-platform structural invariants (driven by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for s in &self.sgss {
+            s.check_invariants()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, MS};
+    use crate::dag::DagSpec;
+
+    fn cfg(num_sgs: usize, workers: usize, cores: u32) -> Config {
+        let mut cfg = Config::default();
+        cfg.cluster = ClusterConfig {
+            num_sgs,
+            workers_per_sgs: workers,
+            cores_per_worker: cores,
+            worker_mem_mb: 16 * 1024,
+            proactive_pool_mb: 8 * 1024,
+        };
+        cfg
+    }
+
+    fn chain_core() -> Coordinator {
+        let mut registry = DagRegistry::new();
+        registry.register(DagSpec::chain(
+            DagId(0),
+            "chain",
+            &[(20 * MS, 150 * MS, 128), (30 * MS, 150 * MS, 128)],
+            300 * MS,
+        ));
+        let mut core = Coordinator::new(cfg(1, 2, 4), registry, 0, 7);
+        core.register_all_dags();
+        core
+    }
+
+    /// Drive the core by hand, applying effects immediately: `Enqueue`
+    /// recurses, `Dispatched` is collected for the caller to "complete".
+    fn settle(core: &mut Coordinator, now: Micros, fx: &mut Vec<Effect>) -> Vec<Effect> {
+        let mut out = Vec::new();
+        while !fx.is_empty() {
+            let batch: Vec<Effect> = std::mem::take(fx);
+            for e in batch {
+                match e {
+                    Effect::Enqueue {
+                        sgs,
+                        queued,
+                        is_root,
+                        ..
+                    } => core.enqueue(now, sgs, queued, is_root, fx),
+                    other => out.push(other),
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn admit_runs_a_chain_dag_through_both_functions() {
+        let mut core = chain_core();
+        let mut fx = Vec::new();
+        let exec: Vec<Micros> = vec![20 * MS, 30 * MS];
+        let req = core.admit(0, DagId(0), exec, None, &mut fx);
+        assert_eq!(core.inflight(), 1);
+        let effects = settle(&mut core, 0, &mut fx);
+        // one root dispatched, cold
+        let (sgs, epoch, d0) = match &effects[..] {
+            [Effect::Dispatched {
+                sgs,
+                epoch,
+                dispatch,
+            }] => (*sgs, *epoch, dispatch.clone()),
+            other => panic!("expected one dispatch, got {other:?}"),
+        };
+        assert_eq!(d0.req, req);
+        assert!(d0.cold);
+        // complete fn 0: fn 1 becomes ready and dispatches
+        core.fn_complete(d0.finish_at, sgs, d0.worker, epoch, req, d0.f, &mut fx);
+        let effects = settle(&mut core, d0.finish_at, &mut fx);
+        let d1 = effects
+            .iter()
+            .find_map(|e| match e {
+                Effect::Dispatched { dispatch, .. } => Some(dispatch.clone()),
+                _ => None,
+            })
+            .expect("child dispatched");
+        assert_eq!(d1.f.idx, 1);
+        // complete fn 1: the request finishes
+        core.fn_complete(d1.finish_at, sgs, d1.worker, epoch, req, d1.f, &mut fx);
+        let effects = settle(&mut core, d1.finish_at, &mut fx);
+        let done = effects.iter().any(|e| matches!(e, Effect::RequestDone { req: r, .. } if *r == req));
+        assert!(done, "expected RequestDone, got {effects:?}");
+        assert_eq!(core.inflight(), 0);
+        assert_eq!(core.metrics.total.completed, 1);
+        core.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deadline_override_applies_per_request() {
+        let mut core = chain_core();
+        let mut fx = Vec::new();
+        let req = core.admit(1000, DagId(0), vec![20 * MS, 30 * MS], Some(70 * MS), &mut fx);
+        assert_eq!(core.request(req).unwrap().deadline_abs, 1000 + 70 * MS);
+        let req2 = core.admit(1000, DagId(0), vec![20 * MS, 30 * MS], None, &mut fx);
+        assert_eq!(core.request(req2).unwrap().deadline_abs, 1000 + 300 * MS);
+    }
+
+    #[test]
+    fn stale_epoch_completion_reenqueues_instead_of_advancing() {
+        let mut core = chain_core();
+        let mut fx = Vec::new();
+        let req = core.admit(0, DagId(0), vec![20 * MS, 30 * MS], None, &mut fx);
+        let effects = settle(&mut core, 0, &mut fx);
+        let (sgs, d0) = match &effects[..] {
+            [Effect::Dispatched { sgs, dispatch, .. }] => (*sgs, dispatch.clone()),
+            other => panic!("{other:?}"),
+        };
+        // the worker fails while fn 0 runs
+        core.fail_worker(sgs, d0.worker);
+        core.recover_worker(sgs, d0.worker);
+        core.fn_complete(d0.finish_at, sgs, d0.worker, 0, req, d0.f, &mut fx);
+        let effects = settle(&mut core, d0.finish_at, &mut fx);
+        // the lost execution was re-enqueued and re-dispatched, still fn 0
+        let redisp = effects
+            .iter()
+            .find_map(|e| match e {
+                Effect::Dispatched { dispatch, .. } => Some(dispatch.clone()),
+                _ => None,
+            })
+            .expect("re-dispatch after lost execution");
+        assert_eq!(redisp.f.idx, 0);
+        assert_eq!(core.inflight(), 1, "request still in flight");
+    }
+
+    #[test]
+    fn sgs_failure_reroutes_queued_work() {
+        let mut registry = DagRegistry::new();
+        registry.register(DagSpec::single(DagId(0), "t", 50 * MS, 200 * MS, 128, 200 * MS));
+        let mut core = Coordinator::new(cfg(2, 1, 1), registry, 0, 7);
+        core.register_all_dags();
+        let mut fx = Vec::new();
+        // saturate the single core of whichever SGS routing picks, then
+        // queue two more requests behind it
+        for _ in 0..3 {
+            core.admit(0, DagId(0), vec![50 * MS], None, &mut fx);
+        }
+        let effects = settle(&mut core, 0, &mut fx);
+        let sgs = effects
+            .iter()
+            .find_map(|e| match e {
+                Effect::Dispatched { sgs, .. } => Some(*sgs),
+                _ => None,
+            })
+            .expect("at least one dispatch");
+        let queued_before = core.sgs(sgs).queue.len();
+        assert!(queued_before > 0, "some requests must be queued");
+        core.sgs_fail(0, sgs, &mut fx);
+        // orphaned entries come back as Enqueue effects to the other SGS
+        let mut reroutes = 0;
+        for e in &*fx {
+            if let Effect::Enqueue { sgs: alt, .. } = e {
+                assert_ne!(*alt, sgs, "rerouted to the dead SGS");
+                reroutes += 1;
+            }
+        }
+        assert_eq!(reroutes, queued_before);
+    }
+}

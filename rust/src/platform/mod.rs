@@ -1,29 +1,36 @@
-//! Full-system assembly: LBS + SGSs + worker pools driven by the
-//! discrete-event engine (§3's request control flow, Fig 3).
+//! Full-system assembly: LBS + SGSs + worker pools (§3's request
+//! control flow, Fig 3), shared between two drivers.
 //!
 //! A request arrives at the LBS, is routed (lottery, §5.2.3) to one SGS
 //! after the routing overhead, gets enqueued there, is scheduled SRSF
 //! onto a worker core (paying setup time iff no warm sandbox), and its
 //! downstream DAG functions are triggered as dependencies complete. In
 //! the background, each SGS runs its estimation loop (§4.3.1) and the
-//! LBS runs its per-DAG scaling loop (Pseudocode 2). The identical
-//! policy structs also drive the real-time path (`realtime`).
+//! LBS runs its per-DAG scaling loop (Pseudocode 2).
+//!
+//! All of that lives in the driver-agnostic [`coordinator`] core. This
+//! module's [`SimPlatform`] is the discrete-event driver: it owns the
+//! virtual clock and translates the core's [`coordinator::Effect`]s into
+//! calendar events. The wall-clock driver ([`realtime`]) turns the same
+//! effects into thread-pool work — both modes exercise the identical
+//! scheduling code (DESIGN.md §Coordinator).
 
+pub mod coordinator;
 pub mod realtime;
 
 use std::collections::HashMap;
 
-use crate::util::fasthash::FastMap;
-
 use crate::config::{Config, Micros};
-use crate::dag::{DagId, DagRegistry, FnId};
-use crate::lbs::{Lbs, ScaleAction, SgsReport};
-use crate::metrics::{Metrics, RequestOutcome};
-use crate::sgs::{QueuedFn, RequestId, SetupStart, Sgs, SgsId};
+use crate::dag::{DagRegistry, FnId};
+use crate::lbs::Lbs;
+use crate::metrics::Metrics;
+use crate::sgs::{QueuedFn, RequestId, Sgs, SgsId};
 use crate::sim::{run_until, EventQueue};
 use crate::util::rng::Rng;
 use crate::worker::WorkerId;
 use crate::workload::App;
+
+pub use coordinator::{Coordinator, Effect};
 
 /// Simulation events.
 #[derive(Debug)]
@@ -43,7 +50,6 @@ enum Event {
         epoch: u64,
         req: RequestId,
         f: FnId,
-        cold: bool,
     },
     /// A proactive sandbox setup completes.
     SetupDone {
@@ -60,22 +66,6 @@ enum Event {
     WorkerFail { sgs: SgsId, worker: WorkerId },
     WorkerRecover { sgs: SgsId, worker: WorkerId },
     SgsFail { sgs: SgsId },
-}
-
-/// Per-request in-flight bookkeeping.
-#[derive(Debug)]
-struct RequestState {
-    dag: DagId,
-    arrival: Micros,
-    deadline_abs: Micros,
-    sgs: SgsId,
-    /// Outstanding parent count per function.
-    pending_parents: Vec<u16>,
-    /// Functions not yet completed.
-    remaining: usize,
-    cold_starts: u32,
-    /// Sampled execution time per function for this request.
-    exec_times: Vec<Micros>,
 }
 
 /// Knobs for a simulation run.
@@ -109,61 +99,38 @@ impl Default for SimOptions {
 /// Named time series recorded during a run (figure data).
 pub type Series = HashMap<String, Vec<(Micros, f64)>>;
 
-/// The simulated Archipelago deployment.
+/// The simulated Archipelago deployment: the coordinator core driven by
+/// the discrete-event engine.
 pub struct SimPlatform {
-    pub cfg: Config,
-    pub registry: DagRegistry,
+    core: Coordinator,
     apps: Vec<App>,
-    lbs: Lbs,
-    sgss: Vec<Sgs>,
     events: EventQueue<Event>,
-    pub metrics: Metrics,
-    requests: FastMap<u64, RequestState>,
-    next_req: u64,
     rng: Rng,
     opts: SimOptions,
     pub series: Series,
-    /// Reused dispatch buffer (hot path, avoids per-event allocation).
-    dispatch_buf: Vec<crate::sgs::Dispatch>,
+    /// Reused effect buffer (hot path, avoids per-event allocation).
+    fx: Vec<Effect>,
     started: bool,
 }
 
 impl SimPlatform {
     /// Build a platform hosting `apps` under `cfg`.
     pub fn new(cfg: Config, apps: Vec<App>, opts: SimOptions) -> Self {
-        cfg.validate().expect("invalid config");
         let mut registry = DagRegistry::new();
         let mut apps = apps;
         for app in apps.iter_mut() {
             let id = registry.register(app.dag.clone());
             app.dag.id = id; // keep the app copy in sync
         }
-        let sgss: Vec<Sgs> = (0..cfg.cluster.num_sgs)
-            .map(|i| {
-                Sgs::new(
-                    SgsId(i as u16),
-                    cfg.cluster.workers_per_sgs,
-                    cfg.cluster.cores_per_worker,
-                    cfg.cluster.proactive_pool_mb,
-                    cfg.sgs.clone(),
-                )
-            })
-            .collect();
-        let lbs = Lbs::new(cfg.lbs.clone(), cfg.cluster.num_sgs, opts.seed);
+        let core = Coordinator::new(cfg, registry, opts.warmup, opts.seed);
         SimPlatform {
-            registry,
+            core,
             apps,
-            lbs,
-            sgss,
             events: EventQueue::new(),
-            metrics: Metrics::new(),
-            requests: FastMap::default(),
-            next_req: 0,
             rng: Rng::new(opts.seed),
             opts,
-            cfg,
             series: HashMap::new(),
-            dispatch_buf: Vec::new(),
+            fx: Vec::new(),
             started: false,
         }
     }
@@ -172,20 +139,37 @@ impl SimPlatform {
         self.events.now()
     }
 
+    /// The shared coordinator core (request table, LBS, SGSs, metrics).
+    pub fn core(&self) -> &Coordinator {
+        &self.core
+    }
+
+    pub fn cfg(&self) -> &Config {
+        &self.core.cfg
+    }
+
+    pub fn registry(&self) -> &DagRegistry {
+        &self.core.registry
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.core.metrics
+    }
+
     pub fn lbs(&self) -> &Lbs {
-        &self.lbs
+        &self.core.lbs
     }
 
     pub fn sgs(&self, id: SgsId) -> &Sgs {
-        &self.sgss[id.0 as usize]
+        self.core.sgs(id)
     }
 
     pub fn sgs_count(&self) -> usize {
-        self.sgss.len()
+        self.core.sgs_count()
     }
 
     pub fn total_cold_starts(&self) -> u64 {
-        self.sgss.iter().map(|s| s.cold_starts()).sum()
+        self.core.total_cold_starts()
     }
 
     pub fn events_dispatched(&self) -> u64 {
@@ -212,10 +196,9 @@ impl SimPlatform {
             return;
         }
         self.started = true;
-        // Register every app and seed its first arrival.
+        self.core.register_all_dags();
+        // Seed every app's first arrival.
         for idx in 0..self.apps.len() {
-            let dag_id = self.apps[idx].dag.id;
-            self.lbs.register_dag(dag_id);
             let first = {
                 let app = &mut self.apps[idx];
                 app.arrivals.next_arrival(0, &mut self.rng)
@@ -223,13 +206,13 @@ impl SimPlatform {
             self.events.push_at(first, Event::Arrival { app_idx: idx });
         }
         // Periodic loops.
-        let est = self.cfg.sgs.estimate_interval;
-        for s in 0..self.sgss.len() {
+        let est = self.core.cfg.sgs.estimate_interval;
+        for s in 0..self.core.sgs_count() {
             self.events
                 .push_at(est, Event::EstimatorTick { sgs: SgsId(s as u16) });
         }
         self.events
-            .push_at(self.cfg.lbs.control_interval, Event::LbsControlTick);
+            .push_at(self.core.cfg.lbs.control_interval, Event::LbsControlTick);
     }
 
     /// Run the simulation to the horizon and return the metrics summary.
@@ -243,22 +226,29 @@ impl SimPlatform {
             platform.handle(q, ev);
         });
         self.events = queue;
-        self.metrics.summary_row()
+        self.core.metrics.summary_row()
     }
 
     // ------------------------------------------------------------------
-    // Event handlers
+    // Event handlers: each translates to a coordinator call, then maps
+    // the emitted effects back onto the calendar.
     // ------------------------------------------------------------------
 
     fn handle(&mut self, q: &mut EventQueue<Event>, ev: Event) {
+        let now = q.now();
+        let mut fx = std::mem::take(&mut self.fx);
+        // Each arm applies its effects to the calendar *before* pushing
+        // its own follow-up event — same-timestamp events dispatch in
+        // push order, so this preserves the pre-refactor ordering.
         match ev {
-            Event::Arrival { app_idx } => self.on_arrival(q, app_idx),
+            Event::Arrival { app_idx } => self.on_arrival(q, app_idx, &mut fx),
             Event::SgsEnqueue {
                 sgs,
                 queued,
                 is_root,
             } => {
-                self.on_enqueue(q, sgs, queued, is_root);
+                self.core.enqueue(now, sgs, queued, is_root, &mut fx);
+                Self::apply(q, &mut fx);
             }
             Event::FnComplete {
                 sgs,
@@ -266,35 +256,101 @@ impl SimPlatform {
                 epoch,
                 req,
                 f,
-                cold,
-            } => self.on_fn_complete(q, sgs, worker, epoch, req, f, cold),
+            } => {
+                self.core.fn_complete(now, sgs, worker, epoch, req, f, &mut fx);
+                Self::apply(q, &mut fx);
+            }
             Event::SetupDone {
                 sgs,
                 worker,
                 epoch,
                 f,
-            } => self.on_setup_done(q, sgs, worker, epoch, f),
-            Event::EstimatorTick { sgs } => self.on_estimator_tick(q, sgs),
-            Event::LbsControlTick => self.on_lbs_control(q),
-            Event::WorkerFail { sgs, worker } => {
-                self.sgss[sgs.0 as usize].fail_worker(worker);
+            } => {
+                self.core.setup_done(now, sgs, worker, epoch, f, &mut fx);
+                Self::apply(q, &mut fx);
             }
-            Event::WorkerRecover { sgs, worker } => {
-                self.sgss[sgs.0 as usize].recover_worker(worker);
+            Event::EstimatorTick { sgs } => {
+                self.core.estimator_tick(now, sgs, &mut fx);
+                Self::apply(q, &mut fx);
+                self.record_sgs_series(now, sgs);
+                q.push_after(
+                    self.core.cfg.sgs.estimate_interval,
+                    Event::EstimatorTick { sgs },
+                );
             }
-            Event::SgsFail { sgs } => self.on_sgs_fail(q, sgs),
+            Event::LbsControlTick => {
+                self.core.lbs_control(now, &mut fx);
+                Self::apply(q, &mut fx);
+                self.record_lbs_series(now);
+                q.push_after(self.core.cfg.lbs.control_interval, Event::LbsControlTick);
+            }
+            Event::WorkerFail { sgs, worker } => self.core.fail_worker(sgs, worker),
+            Event::WorkerRecover { sgs, worker } => self.core.recover_worker(sgs, worker),
+            Event::SgsFail { sgs } => {
+                self.core.sgs_fail(now, sgs, &mut fx);
+                Self::apply(q, &mut fx);
+            }
+        }
+        debug_assert!(fx.is_empty(), "unapplied coordinator effects");
+        self.fx = fx;
+    }
+
+    /// Map coordinator effects onto the event calendar, in order.
+    fn apply(q: &mut EventQueue<Event>, fx: &mut Vec<Effect>) {
+        for e in fx.drain(..) {
+            match e {
+                Effect::Enqueue {
+                    at,
+                    sgs,
+                    queued,
+                    is_root,
+                } => q.push_at(
+                    at,
+                    Event::SgsEnqueue {
+                        sgs,
+                        queued,
+                        is_root,
+                    },
+                ),
+                Effect::Dispatched {
+                    sgs,
+                    epoch,
+                    dispatch: d,
+                } => q.push_at(
+                    d.finish_at,
+                    Event::FnComplete {
+                        sgs,
+                        worker: d.worker,
+                        epoch,
+                        req: d.req,
+                        f: d.f,
+                    },
+                ),
+                Effect::SetupStarted { sgs, epoch, setup } => q.push_at(
+                    setup.done_at,
+                    Event::SetupDone {
+                        sgs,
+                        worker: setup.worker,
+                        epoch,
+                        f: setup.f,
+                    },
+                ),
+                // Metrics were recorded by the core; virtual time has no
+                // caller waiting on a reply.
+                Effect::RequestDone { .. } => {}
+            }
         }
     }
 
-    fn on_arrival(&mut self, q: &mut EventQueue<Event>, app_idx: usize) {
+    fn on_arrival(&mut self, q: &mut EventQueue<Event>, app_idx: usize, fx: &mut Vec<Effect>) {
         let now = q.now();
         let dag_id = self.apps[app_idx].dag.id;
-        let dag = self.registry.get(dag_id);
-        // Build the request.
-        let req_id = RequestId(self.next_req);
-        self.next_req += 1;
+        // Sample this request's execution times (per-request noise).
         let noise = self.opts.exec_noise_frac;
-        let exec_times: Vec<Micros> = dag
+        let exec_times: Vec<Micros> = self
+            .core
+            .registry
+            .get(dag_id)
             .functions
             .iter()
             .map(|f| {
@@ -306,401 +362,79 @@ impl SimPlatform {
                 }
             })
             .collect();
-        let state = RequestState {
-            dag: dag_id,
-            arrival: now,
-            deadline_abs: now + dag.deadline,
-            sgs: SgsId(0), // set below
-            pending_parents: dag.parent_count.clone(),
-            remaining: dag.len(),
-            cold_starts: 0,
-            exec_times,
-        };
-        // Route (the paper's per-request LBS decision).
-        let sgs = self.lbs.route(dag_id);
-        let mut state = state;
-        state.sgs = sgs;
-        // Enqueue the roots after the routing overhead.
-        let enqueue_at = now + self.cfg.lbs.route_overhead;
-        for &root in &self.registry.get(dag_id).roots {
-            let queued = self.make_queued(&state, req_id, dag_id, root, enqueue_at);
-            q.push_at(
-                enqueue_at,
-                Event::SgsEnqueue {
-                    sgs,
-                    queued,
-                    is_root: true,
-                },
-            );
-        }
-        self.requests.insert(req_id.0, state);
+        self.core.admit(now, dag_id, exec_times, None, fx);
+        // Root enqueues go on the calendar before the next arrival
+        // (pre-refactor push order).
+        Self::apply(q, fx);
         // Next arrival of this app.
-        let next = self.apps[app_idx]
-            .arrivals
-            .next_arrival(now, &mut self.rng);
+        let next = self.apps[app_idx].arrivals.next_arrival(now, &mut self.rng);
         q.push_at(next, Event::Arrival { app_idx });
     }
 
-    fn make_queued(
-        &self,
-        state: &RequestState,
-        req: RequestId,
-        dag_id: DagId,
-        fn_idx: u16,
-        enqueued_at: Micros,
-    ) -> QueuedFn {
-        let dag = self.registry.get(dag_id);
-        let spec = &dag.functions[fn_idx as usize];
-        QueuedFn {
-            req,
-            f: dag.fn_id(fn_idx),
-            dag: dag_id,
-            enqueued_at,
-            deadline_abs: state.deadline_abs,
-            remaining_work: dag.cpl[fn_idx as usize],
-            exec_time: state.exec_times[fn_idx as usize],
-            setup_time: spec.setup_time,
-            mem_mb: spec.mem_mb,
-        }
-    }
-
-    fn on_enqueue(
-        &mut self,
-        q: &mut EventQueue<Event>,
-        sgs: SgsId,
-        queued: QueuedFn,
-        is_root: bool,
-    ) {
-        let s = &mut self.sgss[sgs.0 as usize];
-        if !s.is_alive() {
-            // Failure between routing and enqueue: reroute through LBS.
-            let dag = queued.dag;
-            let alt = self.lbs.route(dag);
-            if alt != sgs {
-                q.push_after(
-                    self.cfg.lbs.route_overhead,
-                    Event::SgsEnqueue {
-                        sgs: alt,
-                        queued,
-                        is_root,
-                    },
-                );
-            }
+    /// Per-SGS observability series (Fig 8b/10/11 data), recorded after
+    /// the estimator tick.
+    fn record_sgs_series(&mut self, now: Micros, sgs: SgsId) {
+        if !self.opts.record_series {
             return;
         }
-        s.enqueue(queued, is_root);
-        self.dispatch(q, sgs);
-    }
-
-    /// Run the SGS dispatch loop and schedule completion events.
-    fn dispatch(&mut self, q: &mut EventQueue<Event>, sgs: SgsId) {
-        let now = q.now();
-        let s = &mut self.sgss[sgs.0 as usize];
-        let mut dispatches = std::mem::take(&mut self.dispatch_buf);
-        s.try_dispatch_into(now, &mut dispatches);
-        for d in dispatches.drain(..) {
-            let epoch = s.pool.get(d.worker).epoch();
-            if now >= self.opts.warmup {
-                self.metrics.record_qdelay(d.f.dag, d.queue_delay);
-            }
-            if let Some(state) = self.requests.get_mut(&d.req.0) {
-                state.cold_starts += u32::from(d.cold);
-            }
-            q.push_at(
-                d.finish_at,
-                Event::FnComplete {
-                    sgs,
-                    worker: d.worker,
-                    epoch,
-                    req: d.req,
-                    f: d.f,
-                    cold: d.cold,
-                },
-            );
-        }
-        self.dispatch_buf = dispatches;
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn on_fn_complete(
-        &mut self,
-        q: &mut EventQueue<Event>,
-        sgs: SgsId,
-        worker: WorkerId,
-        epoch: u64,
-        req: RequestId,
-        f: FnId,
-        _cold: bool,
-    ) {
-        let now = q.now();
-        let s = &mut self.sgss[sgs.0 as usize];
-        let current_epoch = s.pool.get(worker).epoch();
-        if current_epoch != epoch || !s.pool.get(worker).is_alive() {
-            // The worker died while this function ran: the execution is
-            // lost; re-enqueue the function (at-least-once semantics).
-            if self.requests.contains_key(&req.0) {
-                let state = &self.requests[&req.0];
-                let queued = self.make_queued(state, req, state.dag, f.idx, now);
-                let target = state.sgs;
-                q.push_at(
-                    now,
-                    Event::SgsEnqueue {
-                        sgs: target,
-                        queued,
-                        is_root: false,
-                    },
-                );
-            }
-            return;
-        }
-        s.complete(worker, f, now);
-
-        // Advance the request's DAG.
-        let mut finished = false;
-        let mut children_ready: Vec<u16> = Vec::new();
-        if let Some(state) = self.requests.get_mut(&req.0) {
-            state.remaining -= 1;
-            finished = state.remaining == 0;
-            let dag = self.registry.get(state.dag);
-            for &c in &dag.children[f.idx as usize] {
-                state.pending_parents[c as usize] -= 1;
-                if state.pending_parents[c as usize] == 0 {
-                    children_ready.push(c);
-                }
-            }
-        }
-        if finished {
-            let state = self.requests.remove(&req.0).expect("finished implies present");
-            if now >= self.opts.warmup {
-                self.metrics.record_completion(&RequestOutcome {
-                    dag: state.dag,
-                    arrival: state.arrival,
-                    completion: now,
-                    deadline_abs: state.deadline_abs,
-                    cold_starts: state.cold_starts,
-                });
-            }
-        } else if !children_ready.is_empty() {
-            let state = &self.requests[&req.0];
-            // Downstream functions run at the same SGS — §4.2: "As an SGS
-            // is DAG aware, it schedules functions once their
-            // dependencies are met."
-            let target = state.sgs;
-            for c in children_ready {
-                let queued = self.make_queued(state, req, state.dag, c, now);
-                q.push_at(
-                    now,
-                    Event::SgsEnqueue {
-                        sgs: target,
-                        queued,
-                        is_root: false,
-                    },
-                );
-            }
-        }
-        // The freed core may admit more queued work.
-        self.dispatch(q, sgs);
-    }
-
-    fn on_setup_done(
-        &mut self,
-        q: &mut EventQueue<Event>,
-        sgs: SgsId,
-        worker: WorkerId,
-        epoch: u64,
-        f: FnId,
-    ) {
-        let s = &mut self.sgss[sgs.0 as usize];
-        if s.pool.get(worker).epoch() != epoch {
-            return; // worker failed mid-setup; sandbox lost
-        }
-        s.setup_done(worker, f);
-        // A fresh warm sandbox can convert a would-be-cold dispatch.
-        self.dispatch(q, sgs);
-    }
-
-    fn on_estimator_tick(&mut self, q: &mut EventQueue<Event>, sgs: SgsId) {
-        let now = q.now();
-        let alive = self.sgss[sgs.0 as usize].is_alive();
-        if alive {
-            let setups = {
-                let s = &mut self.sgss[sgs.0 as usize];
-                s.estimator_tick(now, &self.registry)
-            };
-            self.schedule_setups(q, sgs, &setups);
-            // Piggyback per-DAG reports to the LBS (§5.2.1).
-            let tracked = self.sgss[sgs.0 as usize].estimator.tracked();
-            for dag_id in tracked {
-                let s = &self.sgss[sgs.0 as usize];
-                let dag = self.registry.get(dag_id);
-                let report = SgsReport {
-                    sgs,
-                    sandboxes: s.dag_sandbox_count(dag),
-                    qdelay_us: s.estimator.qdelay(dag_id).unwrap_or(0.0),
-                    window_full: s.estimator.qdelay_window_full(dag_id),
-                };
-                self.lbs.update_report(dag_id, report);
-                if self.opts.record_series {
-                    self.series
-                        .entry(format!("sandboxes.dag{}.sgs{}", dag_id.0, sgs.0))
-                        .or_default()
-                        .push((now, f64::from(report.sandboxes)));
-                    // "ideal" = sandboxes actually needed right now ≈
-                    // concurrently busy ones (Fig 8b reference line)
-                    let busy: u32 = (0..dag.len() as u16)
-                        .map(|i| {
-                            s.pool
-                                .workers
-                                .iter()
-                                .map(|w| {
-                                    w.sandboxes.get(dag.fn_id(i)).map(|x| x.busy).unwrap_or(0)
-                                })
-                                .sum::<u32>()
-                        })
-                        .sum();
-                    self.series
-                        .entry(format!("busy.dag{}.sgs{}", dag_id.0, sgs.0))
-                        .or_default()
-                        .push((now, f64::from(busy)));
-                }
-            }
-        }
-        if self.opts.record_series {
-            let s = &self.sgss[sgs.0 as usize];
-            let busy: u32 = s
-                .pool
-                .workers
-                .iter()
-                .map(|w| w.cores_total() - w.cores_free())
-                .sum();
-            self.series
-                .entry(format!("busy_cores.sgs{}", sgs.0))
-                .or_default()
-                .push((now, f64::from(busy)));
-            self.series
-                .entry(format!("queue_len.sgs{}", sgs.0))
-                .or_default()
-                .push((now, self.sgss[sgs.0 as usize].queue.len() as f64));
-        }
-        q.push_after(
-            self.cfg.sgs.estimate_interval,
-            Event::EstimatorTick { sgs },
-        );
-    }
-
-    fn schedule_setups(&mut self, q: &mut EventQueue<Event>, sgs: SgsId, setups: &[SetupStart]) {
-        for su in setups {
-            let epoch = self.sgss[sgs.0 as usize].pool.get(su.worker).epoch();
-            q.push_at(
-                su.done_at,
-                Event::SetupDone {
-                    sgs,
-                    worker: su.worker,
-                    epoch,
-                    f: su.f,
-                },
-            );
-        }
-    }
-
-    fn on_lbs_control(&mut self, q: &mut EventQueue<Event>) {
-        let now = q.now();
-        let dag_ids: Vec<DagId> = self.registry.iter().map(|d| d.id).collect();
-        for dag_id in dag_ids {
-            let slack = self.registry.get(dag_id).slack();
-            let actions = self.lbs.control_tick(dag_id, slack);
-            for action in actions {
-                match action {
-                    ScaleAction::Out {
-                        dag,
-                        sgs,
-                        prime_target,
-                        expected_rate,
-                    } => {
-                        let setups = self.sgss[sgs.0 as usize].prime_dag(
-                            now,
-                            dag,
-                            prime_target,
-                            expected_rate,
-                            &self.registry,
-                        );
-                        self.schedule_setups(q, sgs, &setups);
-                    }
-                    ScaleAction::In { .. } => {
-                        // Gradual drain: the SGS keeps serving discounted
-                        // lottery traffic; its estimator decays demand.
-                    }
-                    ScaleAction::Drop { dag, sgs } => {
-                        self.sgss[sgs.0 as usize].release_dag(dag, &self.registry);
-                    }
-                    ScaleAction::ResetWindows { dag } => {
-                        let mut members: Vec<SgsId> = self.lbs.active_sgs(dag).to_vec();
-                        members.extend(self.lbs.removed_sgs(dag));
-                        for sgs in members {
-                            self.sgss[sgs.0 as usize]
-                                .estimator
-                                .reset_qdelay_window(dag);
-                        }
-                    }
-                }
-            }
-            if self.opts.record_series {
+        let s = self.core.sgs(sgs);
+        if s.is_alive() {
+            for dag_id in s.estimator.tracked() {
+                let dag = self.core.registry.get(dag_id);
+                let sandboxes = s.dag_sandbox_count(dag);
                 self.series
-                    .entry(format!("active_sgs.dag{}", dag_id.0))
+                    .entry(format!("sandboxes.dag{}.sgs{}", dag_id.0, sgs.0))
                     .or_default()
-                    .push((now, self.lbs.active_sgs(dag_id).len() as f64));
+                    .push((now, f64::from(sandboxes)));
+                // "ideal" = sandboxes actually needed right now ≈
+                // concurrently busy ones (Fig 8b reference line)
+                let busy: u32 = (0..dag.len() as u16)
+                    .map(|i| {
+                        s.pool
+                            .workers
+                            .iter()
+                            .map(|w| w.sandboxes.get(dag.fn_id(i)).map(|x| x.busy).unwrap_or(0))
+                            .sum::<u32>()
+                    })
+                    .sum();
+                self.series
+                    .entry(format!("busy.dag{}.sgs{}", dag_id.0, sgs.0))
+                    .or_default()
+                    .push((now, f64::from(busy)));
             }
         }
-        q.push_after(self.cfg.lbs.control_interval, Event::LbsControlTick);
+        let busy: u32 = s
+            .pool
+            .workers
+            .iter()
+            .map(|w| w.cores_total() - w.cores_free())
+            .sum();
+        self.series
+            .entry(format!("busy_cores.sgs{}", sgs.0))
+            .or_default()
+            .push((now, f64::from(busy)));
+        self.series
+            .entry(format!("queue_len.sgs{}", sgs.0))
+            .or_default()
+            .push((now, s.queue.len() as f64));
     }
 
-    fn on_sgs_fail(&mut self, q: &mut EventQueue<Event>, sgs: SgsId) {
-        // Fail-stop the scheduler process. Worker machines are separate;
-        // running functions complete, but the scheduling queue is lost
-        // and recovered by re-routing through the LBS (§6.1: SGS state
-        // lives in the external store; queued work is re-dispatched).
-        let orphaned = self.sgss[sgs.0 as usize].fail();
-        self.lbs.remove_sgs(sgs);
-        for queued in orphaned {
-            let dag = queued.dag;
-            let alt = self.lbs.route(dag);
-            // Requests whose home SGS died move entirely.
-            if let Some(state) = self
-                .requests
-                .values_mut()
-                .find(|r| r.sgs == sgs && r.dag == dag)
-            {
-                state.sgs = alt;
-            }
-            q.push_after(
-                self.cfg.lbs.route_overhead,
-                Event::SgsEnqueue {
-                    sgs: alt,
-                    queued,
-                    is_root: false,
-                },
-            );
+    /// Per-DAG active-SGS series, recorded after the LBS control tick.
+    fn record_lbs_series(&mut self, now: Micros) {
+        if !self.opts.record_series {
+            return;
         }
-        // Reassign home SGS for all in-flight requests of the dead SGS.
-        let reassign: Vec<u64> = self
-            .requests
-            .iter()
-            .filter(|(_, r)| r.sgs == sgs)
-            .map(|(id, _)| *id)
-            .collect();
-        for id in reassign {
-            let dag = self.requests[&id].dag;
-            let alt = self.lbs.route(dag);
-            self.requests.get_mut(&id).unwrap().sgs = alt;
+        for dag in self.core.registry.iter() {
+            self.series
+                .entry(format!("active_sgs.dag{}", dag.id.0))
+                .or_default()
+                .push((now, self.core.lbs.active_sgs(dag.id).len() as f64));
         }
     }
 
     /// Whole-platform structural invariants (driven by property tests).
     pub fn check_invariants(&self) -> Result<(), String> {
-        for s in &self.sgss {
-            s.check_invariants()?;
-        }
-        Ok(())
+        self.core.check_invariants()
     }
 }
 
@@ -708,7 +442,7 @@ impl SimPlatform {
 mod tests {
     use super::*;
     use crate::config::{ClusterConfig, MS, SEC};
-    use crate::dag::DagSpec;
+    use crate::dag::{DagId, DagSpec};
     use crate::workload::{App, ArrivalProcess, DagClass};
 
     fn small_cfg(num_sgs: usize, workers: usize, cores: u32) -> Config {
@@ -893,10 +627,7 @@ mod tests {
         o.record_series = true;
         let mut p = SimPlatform::new(small_cfg(2, 2, 4), one_app(100.0), o);
         p.run();
-        assert!(p
-            .series
-            .keys()
-            .any(|k| k.starts_with("active_sgs.dag0")));
+        assert!(p.series.keys().any(|k| k.starts_with("active_sgs.dag0")));
         assert!(p.series.keys().any(|k| k.starts_with("sandboxes.dag0")));
     }
 

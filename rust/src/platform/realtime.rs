@@ -1,39 +1,86 @@
-//! Real-time serving mode: threads + real PJRT execution on the request
-//! path (the `serve` subcommand and the `ml_serving` example).
+//! Real-time serving mode: the wall-clock driver for the shared
+//! [`Coordinator`](super::coordinator::Coordinator) core.
 //!
-//! This is the wall-clock twin of the simulated platform: the same SRSF
-//! ordering applies, dispatch is sandbox-aware, and a *cold start* is
-//! real work — the worker thread parses the artifact's HLO text and
-//! compiles it on its own PJRT client (the xla crate's handles are not
-//! `Send`, which conveniently mirrors the paper's per-machine sandboxes:
-//! an executable compiled on worker A cannot serve worker B). A *warm*
-//! hit reuses the worker's cached executable and costs only the
-//! inference.
+//! This is the twin of the simulated platform and — since the
+//! coordinator extraction — literally the same code path: requests are
+//! admitted into the same request table, routed by the same LBS,
+//! ordered by the same SRSF heap ([`crate::sgs::SchedQueue`]), and
+//! placed warm-sandbox-aware by the same dispatch loop. Where the
+//! discrete-event driver maps a `Dispatched` effect to a future
+//! `FnComplete` event, this driver hands it to a worker thread whose
+//! [`WorkerExecutor`] performs the actual computation; the completion
+//! call-back is wall-clock time doing what virtual time does in the
+//! simulator.
 //!
-//! Python never appears here: workers read `artifacts/*.hlo.txt` written
-//! at build time.
+//! A *cold start* is real work — with the PJRT backend the worker
+//! thread parses the artifact's HLO text and compiles it on its own
+//! client (the xla crate's handles are not `Send`, which conveniently
+//! mirrors the paper's per-machine sandboxes: an executable compiled on
+//! worker A cannot serve worker B). A *warm* hit reuses the worker's
+//! cached executable and costs only the inference. The
+//! [`StubExecutorFactory`](crate::runtime::StubExecutorFactory) stands
+//! in for PJRT in tests and demos, so the full DAG-serving path runs
+//! without artifacts.
+//!
+//! Python never appears here: workers read `artifacts/*.hlo.txt`
+//! written at build time.
 
-use std::collections::{HashMap, HashSet};
-use std::path::PathBuf;
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use crate::config::SchedPolicy;
-use crate::runtime::xla;
-use crate::runtime::{Manifest, RuntimeError, Tensor};
+use crate::config::{Config, Micros, SchedPolicy};
+use crate::dag::{DagId, DagRegistry, DagSpec, FnId};
+use crate::metrics::{RequestOutcome, SummaryRow};
+use crate::runtime::{ExecutorFactory, Manifest, RuntimeError, Tensor, XlaExecutorFactory};
+use crate::sgs::{RequestId, SgsId};
+use crate::util::fasthash::FastMap;
+use crate::worker::WorkerId;
 
-/// A serving request: run `artifact` on `input`.
-pub struct Job {
+use super::coordinator::{Coordinator, Effect};
+
+/// Nominal per-function estimates for artifact-derived single-function
+/// DAGs (drive SRSF tie-breaks and the estimator's provisioning; the
+/// *measured* costs are whatever the executor actually takes).
+const ARTIFACT_EXEC_EST: Micros = 1_000;
+const ARTIFACT_SETUP_EST: Micros = 200_000;
+const ARTIFACT_DEADLINE: Micros = 1_000_000;
+
+/// Completion record for one executed function.
+#[derive(Debug, Clone)]
+pub struct FnCompletion {
     pub artifact: String,
-    pub input: Vec<f32>,
-    /// Relative deadline in µs (drives SRSF ordering).
-    pub deadline_us: u64,
-    pub reply: Sender<Completion>,
-    submitted: Instant,
+    /// Function index within the request's DAG.
+    pub fn_idx: u16,
+    /// Worker thread that ran it.
+    pub worker: usize,
+    pub cold: bool,
+    /// SGS queuing delay before dispatch.
+    pub queue_us: u64,
+    /// Cold-start (e.g. HLO parse + PJRT compile) time, 0 when warm.
+    pub setup_us: u64,
+    /// Pure execution time.
+    pub exec_us: u64,
+    pub outputs: Vec<Tensor>,
 }
 
-/// Completion record returned to the caller.
+/// Completion record for a whole DAG request.
+#[derive(Debug, Clone)]
+pub struct DagCompletion {
+    pub req: RequestId,
+    /// End-to-end: admit → last function finished.
+    pub e2e_us: u64,
+    pub deadline_met: bool,
+    /// Cold starts among this request's function executions.
+    pub cold_starts: u32,
+    /// Per-function records in completion order.
+    pub functions: Vec<FnCompletion>,
+}
+
+/// Single-artifact completion (compatibility shape for [`Server::submit`]).
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub artifact: String,
@@ -41,7 +88,7 @@ pub struct Completion {
     pub cold: bool,
     /// Queue wait before a worker picked the job up.
     pub queue_us: u64,
-    /// Cold-start (HLO parse + PJRT compile) time, 0 when warm.
+    /// Cold-start time, 0 when warm.
     pub setup_us: u64,
     /// Pure inference time.
     pub exec_us: u64,
@@ -50,301 +97,740 @@ pub struct Completion {
     pub outputs: Vec<Tensor>,
 }
 
-struct Shared {
-    queue: Mutex<QueueState>,
-    cv: Condvar,
+/// Knobs for the real-time platform.
+#[derive(Debug, Clone)]
+pub struct RtOptions {
+    /// Worker threads (one core each: a thread runs one function at a
+    /// time, exactly like a simulated single-core worker).
+    pub workers: usize,
+    pub policy: SchedPolicy,
+    /// Run the §4.3.1 estimator and §5.2 LBS control loops on a
+    /// background thread (proactive sandbox allocation in wall-clock
+    /// time). Off for deterministic tests.
+    pub background_ticks: bool,
+    /// Per-worker sandbox memory pool (MB).
+    pub pool_mb: u64,
 }
 
-struct QueueState {
-    /// (srsf key, seq, job)
-    jobs: Vec<(i64, u64, Job)>,
-    seq: u64,
-    policy: SchedPolicy,
-    /// Which artifacts each worker has compiled (warm sets).
-    warm: Vec<HashSet<String>>,
-    /// Which workers are currently waiting for work.
-    idle: Vec<bool>,
+impl Default for RtOptions {
+    fn default() -> Self {
+        RtOptions {
+            workers: 2,
+            policy: SchedPolicy::Srsf,
+            background_ticks: true,
+            pool_mb: 8 * 1024,
+        }
+    }
+}
+
+/// Who gets the reply when a request finishes.
+enum Reply {
+    Single(Sender<Completion>),
+    Dag(Sender<DagCompletion>),
+}
+
+/// Per-request reply bookkeeping (the driver-side shadow of the
+/// coordinator's request table).
+struct Pending {
+    reply: Reply,
+    input: Arc<Vec<f32>>,
+    functions: Vec<FnCompletion>,
+    failed: bool,
+}
+
+/// Work handed to a worker thread.
+enum Job {
+    Run {
+        sgs: SgsId,
+        worker: WorkerId,
+        epoch: u64,
+        req: RequestId,
+        f: FnId,
+        artifact: String,
+        cold: bool,
+        queue_us: u64,
+        input: Arc<Vec<f32>>,
+    },
+    Setup {
+        sgs: SgsId,
+        worker: WorkerId,
+        epoch: u64,
+        f: FnId,
+        artifact: String,
+        prewarm: bool,
+    },
+}
+
+/// One worker thread's work, in two lanes: dispatched requests always
+/// run before proactive setups, mirroring the simulator where a setup
+/// charges memory but never a core — a queued compile must not delay a
+/// function the scheduler already placed on this worker.
+#[derive(Default)]
+struct WorkerQueue {
+    runs: VecDeque<Job>,
+    setups: VecDeque<Job>,
+}
+
+impl WorkerQueue {
+    fn pop(&mut self) -> Option<Job> {
+        self.runs.pop_front().or_else(|| self.setups.pop_front())
+    }
+}
+
+struct RtState {
+    core: Coordinator,
+    /// Per worker-thread job queues (indexed by thread).
+    jobs: Vec<WorkerQueue>,
+    pending: FastMap<u64, Pending>,
+    prewarm_outstanding: usize,
+    prewarm_error: Option<String>,
     shutdown: bool,
 }
 
-impl QueueState {
-    /// Pick the job this worker should run: warm-here first, then SRSF
-    /// key, then arrival order (sandbox-aware dispatch). A job that is
-    /// warm on some *other idle* worker is left for that worker — the
-    /// real-time analogue of routing to the proactive sandbox — unless
-    /// this worker is also warm for it.
-    fn take_for(&mut self, worker: usize) -> Option<Job> {
-        if self.jobs.is_empty() {
-            return None;
-        }
-        let warm_here = &self.warm[worker];
-        let mut best: Option<(bool, i64, u64, usize)> = None;
-        for (i, (key, seq, job)) in self.jobs.iter().enumerate() {
-            let is_warm = warm_here.contains(&job.artifact);
-            if !is_warm {
-                let better_host_idle = self.idle.iter().enumerate().any(|(w, idle)| {
-                    *idle && w != worker && self.warm[w].contains(&job.artifact)
-                });
-                if better_host_idle {
-                    continue; // leave it for the warm worker
+struct Shared {
+    state: Mutex<RtState>,
+    cv: Condvar,
+    start: Instant,
+    workers_per_sgs: usize,
+    /// artifact name → its single-function DAG (for [`Server::submit`]).
+    singles: HashMap<String, DagId>,
+}
+
+impl Shared {
+    /// Wall-clock microseconds since server start — the driver's `now`.
+    fn now(&self) -> Micros {
+        self.start.elapsed().as_micros() as u64
+    }
+}
+
+fn thread_index(sgs: SgsId, worker: WorkerId, workers_per_sgs: usize) -> usize {
+    sgs.0 as usize * workers_per_sgs + worker.0 as usize
+}
+
+fn fn_name(registry: &DagRegistry, f: FnId) -> String {
+    registry.get(f.dag).functions[f.idx as usize].name.clone()
+}
+
+/// Turn coordinator effects into wall-clock actions: `Enqueue` feeds
+/// straight back into the core (routing overhead is real lock time, not
+/// simulated), `Dispatched`/`SetupStarted` become worker jobs, and
+/// `RequestDone` resolves the caller's reply channel. Newly generated
+/// effects are processed until quiescent.
+fn drain_effects(state: &mut RtState, now: Micros, fx: &mut Vec<Effect>, workers_per_sgs: usize) {
+    while !fx.is_empty() {
+        let batch: Vec<Effect> = std::mem::take(fx);
+        for e in batch {
+            match e {
+                Effect::Enqueue {
+                    sgs,
+                    queued,
+                    is_root,
+                    ..
+                } => state.core.enqueue(now, sgs, queued, is_root, fx),
+                Effect::Dispatched {
+                    sgs,
+                    epoch,
+                    dispatch: d,
+                } => {
+                    let artifact = fn_name(&state.core.registry, d.f);
+                    let input = state
+                        .pending
+                        .get(&d.req.0)
+                        .map(|p| Arc::clone(&p.input))
+                        .unwrap_or_default();
+                    let t = thread_index(sgs, d.worker, workers_per_sgs);
+                    state.jobs[t].runs.push_back(Job::Run {
+                        sgs,
+                        worker: d.worker,
+                        epoch,
+                        req: d.req,
+                        f: d.f,
+                        artifact,
+                        cold: d.cold,
+                        queue_us: d.queue_delay,
+                        input,
+                    });
                 }
+                Effect::SetupStarted { sgs, epoch, setup } => {
+                    let artifact = fn_name(&state.core.registry, setup.f);
+                    let t = thread_index(sgs, setup.worker, workers_per_sgs);
+                    state.jobs[t].setups.push_back(Job::Setup {
+                        sgs,
+                        worker: setup.worker,
+                        epoch,
+                        f: setup.f,
+                        artifact,
+                        prewarm: false,
+                    });
+                }
+                Effect::RequestDone { req, outcome } => finalize(state, req, outcome),
             }
-            let cand = (!is_warm, *key, *seq);
-            let better = match best {
-                None => true,
-                Some((w, k, s, _)) => cand < (w, k, s),
-            };
-            if better {
-                best = Some((cand.0, cand.1, cand.2, i));
-            }
         }
-        let (_, _, _, idx) = best?;
-        Some(self.jobs.swap_remove(idx).2)
     }
 }
 
-/// The real-time server.
-pub struct Server {
-    shared: Arc<Shared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    pub manifest: Manifest,
-}
-
-impl Server {
-    /// Start `workers` worker threads serving the given artifact dir.
-    /// `prewarm` artifacts are compiled on every worker before the
-    /// server accepts jobs (proactive allocation's real-time analogue).
-    pub fn start(
-        artifact_dir: &std::path::Path,
-        workers: usize,
-        policy: SchedPolicy,
-        prewarm: &[&str],
-    ) -> Result<Server, RuntimeError> {
-        assert!(workers > 0);
-        let manifest = Manifest::load(artifact_dir)?;
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(QueueState {
-                jobs: Vec::new(),
-                seq: 0,
-                policy,
-                warm: vec![HashSet::new(); workers],
-                idle: vec![true; workers],
-                shutdown: false,
-            }),
-            cv: Condvar::new(),
-        });
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let shared = Arc::clone(&shared);
-            let dir: PathBuf = artifact_dir.to_path_buf();
-            let manifest = manifest.clone();
-            let prewarm: Vec<String> = prewarm.iter().map(|s| s.to_string()).collect();
-            let ready = ready_tx.clone();
-            handles.push(std::thread::spawn(move || {
-                worker_main(w, shared, dir, manifest, prewarm, ready);
-            }));
-        }
-        drop(ready_tx);
-        for _ in 0..workers {
-            ready_rx
-                .recv()
-                .map_err(|e| RuntimeError::Xla(format!("worker start: {e}")))?
-                .map_err(RuntimeError::Xla)?;
-        }
-        Ok(Server {
-            shared,
-            handles,
-            manifest,
-        })
-    }
-
-    /// Submit a job; the completion arrives on the returned receiver.
-    pub fn submit(
-        &self,
-        artifact: &str,
-        input: Vec<f32>,
-        deadline_us: u64,
-    ) -> Receiver<Completion> {
-        let (tx, rx) = channel();
-        let job = Job {
-            artifact: artifact.to_string(),
-            input,
-            deadline_us,
-            reply: tx,
-            submitted: Instant::now(),
-        };
-        let mut q = self.shared.queue.lock().unwrap();
-        let seq = q.seq;
-        q.seq += 1;
-        let key = match q.policy {
-            // SRSF over relative deadlines: tighter deadline = smaller
-            // key = dispatched first among queued jobs.
-            SchedPolicy::Srsf => job.deadline_us as i64,
-            SchedPolicy::Fifo => seq as i64,
-        };
-        q.jobs.push((key, seq, job));
-        drop(q);
-        self.shared.cv.notify_all();
-        rx
-    }
-
-    /// Drain and stop all workers.
-    pub fn shutdown(mut self) {
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            q.shutdown = true;
-        }
-        self.shared.cv.notify_all();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-
-    /// Current warm-set sizes per worker (observability).
-    pub fn warm_counts(&self) -> Vec<usize> {
-        let q = self.shared.queue.lock().unwrap();
-        q.warm.iter().map(|s| s.len()).collect()
-    }
-}
-
-fn worker_main(
-    id: usize,
-    shared: Arc<Shared>,
-    dir: PathBuf,
-    manifest: Manifest,
-    prewarm: Vec<String>,
-    ready: Sender<Result<(), String>>,
-) {
-    // Each worker owns its own PJRT client + executable cache — the
-    // "sandboxes" of this machine.
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
-        Err(e) => {
-            let _ = ready.send(Err(format!("worker {id}: pjrt: {e}")));
-            return;
-        }
+/// Resolve a finished request's reply channel.
+fn finalize(state: &mut RtState, req: RequestId, outcome: RequestOutcome) {
+    let Some(p) = state.pending.remove(&req.0) else {
+        return;
     };
-    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
-    for name in &prewarm {
-        match compile_artifact(&client, &dir, &manifest, name) {
-            Ok(exe) => {
-                cache.insert(name.clone(), exe);
-            }
-            Err(e) => {
-                let _ = ready.send(Err(format!("worker {id}: prewarm {name}: {e}")));
-                return;
-            }
-        }
+    if p.failed {
+        // Executor error: drop the sender; the caller observes a closed
+        // channel (the pre-refactor contract for failed jobs).
+        return;
     }
-    {
-        let mut q = shared.queue.lock().unwrap();
-        for name in cache.keys() {
-            q.warm[id].insert(name.clone());
-        }
-    }
-    let _ = ready.send(Ok(()));
-
-    loop {
-        let job = {
-            let mut q = shared.queue.lock().unwrap();
-            loop {
-                if q.shutdown {
-                    return;
-                }
-                if let Some(job) = q.take_for(id) {
-                    q.idle[id] = false;
-                    break job;
-                }
-                q.idle[id] = true;
-                q = shared.cv.wait(q).unwrap();
-            }
-        };
-        let queue_us = job.submitted.elapsed().as_micros() as u64;
-
-        // Cold start: parse + compile the artifact on this worker.
-        let mut setup_us = 0;
-        let cold = !cache.contains_key(&job.artifact);
-        if cold {
-            let t0 = Instant::now();
-            match compile_artifact(&client, &dir, &manifest, &job.artifact) {
-                Ok(exe) => {
-                    cache.insert(job.artifact.clone(), exe);
-                    setup_us = t0.elapsed().as_micros() as u64;
-                }
-                Err(_) => {
-                    continue; // drop job; caller sees a closed channel
-                }
-            }
-        }
-
-        // Execute.
-        let entry = manifest.entry(&job.artifact).expect("compiled implies known");
-        let dims: Vec<i64> = entry.input_shape.iter().map(|&d| d as i64).collect();
-        let t0 = Instant::now();
-        let outputs = (|| -> Result<Vec<Tensor>, RuntimeError> {
-            let lit = xla::Literal::vec1(job.input.as_slice()).reshape(&dims)?;
-            let exe = cache.get(&job.artifact).expect("just ensured");
-            let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-            let parts = result.to_tuple()?;
-            let mut out = Vec::with_capacity(parts.len());
-            for p in parts {
-                out.push(match p.element_type()? {
-                    xla::ElementType::F32 => Tensor::F32(p.to_vec::<f32>()?),
-                    xla::ElementType::S32 => Tensor::I32(p.to_vec::<i32>()?),
-                    xla::ElementType::S64 => Tensor::I64(p.to_vec::<i64>()?),
-                    other => {
-                        return Err(RuntimeError::Xla(format!("output type {other:?}")))
-                    }
+    match p.reply {
+        Reply::Single(tx) => {
+            if let Some(f) = p.functions.into_iter().next() {
+                let _ = tx.send(Completion {
+                    artifact: f.artifact,
+                    worker: f.worker,
+                    cold: f.cold,
+                    queue_us: f.queue_us,
+                    setup_us: f.setup_us,
+                    exec_us: f.exec_us,
+                    e2e_us: outcome.e2e_latency(),
+                    outputs: f.outputs,
                 });
             }
-            Ok(out)
-        })();
-        let exec_us = t0.elapsed().as_micros() as u64;
-
-        {
-            let mut q = shared.queue.lock().unwrap();
-            q.warm[id].insert(job.artifact.clone());
-            q.idle[id] = true;
         }
-        shared.cv.notify_all();
-
-        if let Ok(outputs) = outputs {
-            let _ = job.reply.send(Completion {
-                artifact: job.artifact,
-                worker: id,
-                cold,
-                queue_us,
-                setup_us,
-                exec_us,
-                e2e_us: job.submitted.elapsed().as_micros() as u64,
-                outputs,
+        Reply::Dag(tx) => {
+            let _ = tx.send(DagCompletion {
+                req,
+                e2e_us: outcome.e2e_latency(),
+                deadline_met: outcome.deadline_met(),
+                cold_starts: outcome.cold_starts,
+                functions: p.functions,
             });
         }
     }
 }
 
-fn compile_artifact(
-    client: &xla::PjRtClient,
-    dir: &std::path::Path,
-    manifest: &Manifest,
-    name: &str,
-) -> Result<xla::PjRtLoadedExecutable, RuntimeError> {
-    let entry = manifest
-        .entry(name)
-        .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))?;
-    let path = dir.join(&entry.file);
-    let proto = xla::HloModuleProto::from_text_file(
-        path.to_str()
-            .ok_or_else(|| RuntimeError::Manifest("non-utf8 path".into()))?,
-    )?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    Ok(client.compile(&comp)?)
+/// The real-time server: worker threads + optional control-loop ticker
+/// around the shared coordinator core.
+pub struct Server {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    ticker: Option<JoinHandle<()>>,
+    pub manifest: Manifest,
+}
+
+impl Server {
+    /// Start a PJRT-backed server over an artifact directory: every
+    /// manifest entry becomes a single-function DAG served by
+    /// [`Server::submit`]. `prewarm` artifacts are compiled on every
+    /// worker before the server accepts jobs (proactive allocation's
+    /// real-time analogue).
+    pub fn start(
+        artifact_dir: &Path,
+        workers: usize,
+        policy: SchedPolicy,
+        prewarm: &[&str],
+    ) -> Result<Server, RuntimeError> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let dags: Vec<DagSpec> = manifest
+            .entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let mem_mb = (e.vmem_bytes / (1024 * 1024)).max(128);
+                DagSpec::single(
+                    DagId(i as u32),
+                    &e.name,
+                    ARTIFACT_EXEC_EST,
+                    ARTIFACT_SETUP_EST,
+                    mem_mb,
+                    ARTIFACT_DEADLINE,
+                )
+            })
+            .collect();
+        let factory = Arc::new(XlaExecutorFactory {
+            dir: artifact_dir.to_path_buf(),
+            manifest: manifest.clone(),
+        });
+        let opts = RtOptions {
+            workers,
+            policy,
+            ..RtOptions::default()
+        };
+        Self::start_with(factory, dags, opts, prewarm, manifest)
+    }
+
+    /// Start a server over arbitrary DAGs with a custom execution
+    /// backend — the general entry point the artifact-based
+    /// [`Server::start`] delegates to, and the one tests drive with a
+    /// [`StubExecutorFactory`](crate::runtime::StubExecutorFactory).
+    pub fn start_with(
+        factory: Arc<dyn ExecutorFactory>,
+        dags: Vec<DagSpec>,
+        opts: RtOptions,
+        prewarm: &[&str],
+        manifest: Manifest,
+    ) -> Result<Server, RuntimeError> {
+        assert!(opts.workers > 0, "need at least one worker thread");
+        let mut registry = DagRegistry::new();
+        for dag in dags {
+            registry.register(dag);
+        }
+        let mut singles = HashMap::new();
+        for d in registry.iter() {
+            if d.len() == 1 {
+                singles.insert(d.functions[0].name.clone(), d.id);
+            }
+        }
+
+        // One SGS whose workers are this process's threads, one core
+        // each: a thread runs one function at a time, exactly like a
+        // simulated single-core worker.
+        let mut cfg = Config::default();
+        cfg.cluster.num_sgs = 1;
+        cfg.cluster.workers_per_sgs = opts.workers;
+        cfg.cluster.cores_per_worker = 1;
+        cfg.cluster.worker_mem_mb = cfg.cluster.worker_mem_mb.max(opts.pool_mb);
+        cfg.cluster.proactive_pool_mb = opts.pool_mb;
+        cfg.sgs.sched_policy = opts.policy;
+        // Wall-clock overheads are real (lock hold times), not modeled.
+        cfg.sgs.sched_overhead = 0;
+        cfg.lbs.route_overhead = 0;
+
+        let mut core = Coordinator::new(cfg, registry, 0, 0x5eed);
+        core.register_all_dags();
+        let workers_per_sgs = opts.workers;
+        let thread_count = core.sgs_count() * workers_per_sgs;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(RtState {
+                core,
+                jobs: (0..thread_count).map(|_| WorkerQueue::default()).collect(),
+                pending: FastMap::default(),
+                prewarm_outstanding: 0,
+                prewarm_error: None,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            start: Instant::now(),
+            workers_per_sgs,
+            singles,
+        });
+
+        // Spawn the worker threads; each builds its own executor.
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let mut handles = Vec::with_capacity(thread_count);
+        for t in 0..thread_count {
+            let shared = Arc::clone(&shared);
+            let factory = Arc::clone(&factory);
+            let ready = ready_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_main(t, shared, factory, ready);
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..thread_count {
+            ready_rx
+                .recv()
+                .map_err(|e| RuntimeError::Xla(format!("worker start: {e}")))?
+                .map_err(RuntimeError::Xla)?;
+        }
+
+        // Prewarm: proactively set up the named functions on every
+        // worker and wait until the compiles finish (the server accepts
+        // no jobs before returning, so this is a clean barrier).
+        {
+            let mut st = shared.state.lock().unwrap();
+            for name in prewarm {
+                let found = st.core.registry.iter().find_map(|d| {
+                    d.functions
+                        .iter()
+                        .position(|f| f.name == *name)
+                        .map(|i| (d.fn_id(i as u16), d.functions[i].mem_mb))
+                });
+                let Some((f, mem_mb)) = found else {
+                    return Err(RuntimeError::UnknownArtifact(name.to_string()));
+                };
+                for s in 0..st.core.sgs_count() {
+                    for w in 0..workers_per_sgs {
+                        let sgs = SgsId(s as u16);
+                        let worker = WorkerId(w as u16);
+                        // Prewarm promises the artifact warm on *every*
+                        // worker before the server accepts jobs — fail
+                        // start loudly rather than silently skip one.
+                        if st.core.sgss[s]
+                            .pool
+                            .get_mut(worker)
+                            .sandboxes
+                            .begin_setup(f, mem_mb)
+                            .is_err()
+                        {
+                            st.shutdown = true;
+                            drop(st);
+                            shared.cv.notify_all();
+                            for h in handles {
+                                let _ = h.join();
+                            }
+                            return Err(RuntimeError::Xla(format!(
+                                "prewarm {name}: no sandbox capacity for {mem_mb} MB \
+                                 on worker {w} (pool {} MB)",
+                                opts.pool_mb
+                            )));
+                        }
+                        let artifact = (*name).to_string();
+                        st.prewarm_outstanding += 1;
+                        st.jobs[thread_index(sgs, worker, workers_per_sgs)]
+                            .setups
+                            .push_back(Job::Setup {
+                                sgs,
+                                worker,
+                                epoch: 0,
+                                f,
+                                artifact,
+                                prewarm: true,
+                            });
+                    }
+                }
+            }
+            shared.cv.notify_all();
+            while st.prewarm_outstanding > 0 {
+                st = shared.cv.wait(st).unwrap();
+            }
+            if let Some(e) = st.prewarm_error.take() {
+                st.shutdown = true;
+                drop(st);
+                shared.cv.notify_all();
+                for h in handles {
+                    let _ = h.join();
+                }
+                return Err(RuntimeError::Xla(e));
+            }
+        }
+
+        // Background control loops (estimator + LBS scaling).
+        let ticker = opts.background_ticks.then(|| {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || ticker_main(shared))
+        });
+
+        Ok(Server {
+            shared,
+            handles,
+            ticker,
+            manifest,
+        })
+    }
+
+    /// Submit a single-artifact request; the completion arrives on the
+    /// returned receiver (closed channel = unknown artifact or executor
+    /// failure).
+    pub fn submit(&self, artifact: &str, input: Vec<f32>, deadline_us: u64) -> Receiver<Completion> {
+        let (tx, rx) = channel();
+        if let Some(&dag) = self.shared.singles.get(artifact) {
+            self.admit(dag, input, deadline_us, Reply::Single(tx));
+        }
+        rx
+    }
+
+    /// Submit a full DAG request with a per-request deadline: every
+    /// function executes (dependency-ordered, warm-sandbox-aware) on the
+    /// worker pool, and the aggregate completion arrives on the returned
+    /// receiver.
+    pub fn submit_dag(
+        &self,
+        dag: DagId,
+        input: Vec<f32>,
+        deadline_us: u64,
+    ) -> Receiver<DagCompletion> {
+        let (tx, rx) = channel();
+        self.admit(dag, input, deadline_us, Reply::Dag(tx));
+        rx
+    }
+
+    /// Look up a registered DAG by name.
+    pub fn dag_id(&self, name: &str) -> Option<DagId> {
+        let st = self.shared.state.lock().unwrap();
+        st.core.registry.iter().find(|d| d.name == name).map(|d| d.id)
+    }
+
+    fn admit(&self, dag: DagId, input: Vec<f32>, deadline_us: u64, reply: Reply) {
+        let now = self.shared.now();
+        let mut fx = Vec::new();
+        let mut st = self.shared.state.lock().unwrap();
+        let exec_times: Vec<Micros> = st
+            .core
+            .registry
+            .get(dag)
+            .functions
+            .iter()
+            .map(|f| f.exec_time)
+            .collect();
+        let req = st.core.admit(now, dag, exec_times, Some(deadline_us), &mut fx);
+        st.pending.insert(
+            req.0,
+            Pending {
+                reply,
+                input: Arc::new(input),
+                functions: Vec::new(),
+                failed: false,
+            },
+        );
+        drain_effects(&mut st, now, &mut fx, self.shared.workers_per_sgs);
+        drop(st);
+        self.shared.cv.notify_all();
+    }
+
+    /// Warm sandbox kinds per worker thread (observability).
+    pub fn warm_counts(&self) -> Vec<usize> {
+        let st = self.shared.state.lock().unwrap();
+        let mut out = vec![0usize; st.jobs.len()];
+        for (s, sgs) in st.core.sgss.iter().enumerate() {
+            for (w, worker) in sgs.pool.workers.iter().enumerate() {
+                out[s * self.shared.workers_per_sgs + w] = worker
+                    .sandboxes
+                    .iter()
+                    .filter(|(_, set)| set.active() > 0)
+                    .count();
+            }
+        }
+        out
+    }
+
+    /// Aggregate latency/deadline metrics across completed requests.
+    pub fn summary(&self) -> SummaryRow {
+        let st = self.shared.state.lock().unwrap();
+        st.core.metrics.summary_row()
+    }
+
+    /// Total request-paid cold starts so far.
+    pub fn total_cold_starts(&self) -> u64 {
+        let st = self.shared.state.lock().unwrap();
+        st.core.total_cold_starts()
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(t) = self.ticker.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_main(
+    t: usize,
+    shared: Arc<Shared>,
+    factory: Arc<dyn ExecutorFactory>,
+    ready: Sender<Result<(), String>>,
+) {
+    // Each worker owns its own executor — the "sandboxes" of this
+    // machine (per-thread PJRT client + executable cache, or the stub).
+    let mut exec = match factory.make(t) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(format!("worker {t}: {e}")));
+            return;
+        }
+    };
+    let _ = ready.send(Ok(()));
+    drop(ready);
+
+    let mut fx: Vec<Effect> = Vec::new();
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(j) = st.jobs[t].pop() {
+                    break j;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+        };
+        match job {
+            Job::Setup {
+                sgs,
+                worker,
+                epoch,
+                f,
+                artifact,
+                prewarm,
+            } => {
+                let result = exec.warm_up(&artifact);
+                let now = shared.now();
+                let mut st = shared.state.lock().unwrap();
+                if prewarm {
+                    st.prewarm_outstanding -= 1;
+                    if let Err(e) = &result {
+                        st.prewarm_error
+                            .get_or_insert_with(|| format!("worker {t}: prewarm {artifact}: {e}"));
+                    }
+                }
+                // Mark the sandbox warm even on a failed compile: the
+                // executor retries at execute time, and a second failure
+                // fails the request — the table and the cache reconverge
+                // either way.
+                st.core.setup_done(now, sgs, worker, epoch, f, &mut fx);
+                drain_effects(&mut st, now, &mut fx, shared.workers_per_sgs);
+                drop(st);
+                shared.cv.notify_all();
+            }
+            Job::Run {
+                sgs,
+                worker,
+                epoch,
+                req,
+                f,
+                artifact,
+                cold,
+                queue_us,
+                input,
+            } => {
+                // Cold start: the real compile cost lands here, on the
+                // request path, exactly where the simulator charges
+                // `setup_time`.
+                let mut setup_us = 0u64;
+                if !exec.is_warm(&artifact) {
+                    let t0 = Instant::now();
+                    let _ = exec.warm_up(&artifact); // failure surfaces below
+                    setup_us = t0.elapsed().as_micros() as u64;
+                }
+                let t0 = Instant::now();
+                let result = exec.execute(&artifact, &input);
+                let exec_us = t0.elapsed().as_micros() as u64;
+
+                let now = shared.now();
+                let mut st = shared.state.lock().unwrap();
+                if let Some(p) = st.pending.get_mut(&req.0) {
+                    match result {
+                        Ok(outputs) => p.functions.push(FnCompletion {
+                            artifact,
+                            fn_idx: f.idx,
+                            worker: t,
+                            cold,
+                            queue_us,
+                            setup_us,
+                            exec_us,
+                            outputs,
+                        }),
+                        Err(_) => p.failed = true,
+                    }
+                }
+                st.core.fn_complete(now, sgs, worker, epoch, req, f, &mut fx);
+                drain_effects(&mut st, now, &mut fx, shared.workers_per_sgs);
+                drop(st);
+                shared.cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Background control loops: the §4.3.1 estimator tick and §5.2 LBS
+/// scaling evaluation, in wall-clock time. Sleeps in short slices so
+/// shutdown stays prompt.
+fn ticker_main(shared: Arc<Shared>) {
+    const SLICE: Duration = Duration::from_millis(20);
+    let (est_interval, control_interval) = {
+        let st = shared.state.lock().unwrap();
+        (
+            st.core.cfg.sgs.estimate_interval,
+            st.core.cfg.lbs.control_interval,
+        )
+    };
+    let mut fx: Vec<Effect> = Vec::new();
+    let mut last_est: Micros = 0;
+    let mut last_control: Micros = 0;
+    loop {
+        std::thread::sleep(SLICE);
+        let now = shared.now();
+        let mut st = shared.state.lock().unwrap();
+        if st.shutdown {
+            return;
+        }
+        let mut acted = false;
+        if now.saturating_sub(last_est) >= est_interval {
+            last_est = now;
+            for s in 0..st.core.sgs_count() {
+                st.core.estimator_tick(now, SgsId(s as u16), &mut fx);
+            }
+            acted = true;
+        }
+        if now.saturating_sub(last_control) >= control_interval {
+            last_control = now;
+            st.core.lbs_control(now, &mut fx);
+            acted = true;
+        }
+        if acted {
+            drain_effects(&mut st, now, &mut fx, shared.workers_per_sgs);
+            drop(st);
+            shared.cv.notify_all();
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::MS;
+    use crate::runtime::StubExecutorFactory;
+    use std::path::PathBuf;
+
+    fn stub_server(workers: usize, dags: Vec<DagSpec>, prewarm: &[&str]) -> Server {
+        let factory = Arc::new(StubExecutorFactory::default());
+        let opts = RtOptions {
+            workers,
+            policy: SchedPolicy::Srsf,
+            background_ticks: false,
+            pool_mb: 4 * 1024,
+        };
+        Server::start_with(factory, dags, opts, prewarm, Manifest::empty()).unwrap()
+    }
+
+    #[test]
+    fn stub_single_function_cold_then_warm() {
+        let dag = DagSpec::single(DagId(0), "score", 5 * MS, 100 * MS, 128, 500 * MS);
+        let server = stub_server(1, vec![dag], &[]);
+        let c = server
+            .submit("score", vec![1.0, 2.0], 500_000)
+            .recv()
+            .unwrap();
+        assert!(c.cold, "first touch must be cold");
+        assert_eq!(c.outputs[0].as_f32().unwrap(), &[3.0]);
+        let c2 = server
+            .submit("score", vec![4.0, 0.5], 500_000)
+            .recv()
+            .unwrap();
+        assert!(!c2.cold, "sandbox reused on the same worker");
+        assert_eq!(c2.setup_us, 0);
+        assert_eq!(c2.outputs[0].as_f32().unwrap(), &[4.5]);
+        assert_eq!(server.total_cold_starts(), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn stub_prewarm_makes_first_hit_warm() {
+        let dag = DagSpec::single(DagId(0), "score", 5 * MS, 100 * MS, 128, 500 * MS);
+        let server = stub_server(2, vec![dag], &["score"]);
+        let c = server.submit("score", vec![1.0], 500_000).recv().unwrap();
+        assert!(!c.cold, "prewarmed artifact must be warm");
+        assert_eq!(c.setup_us, 0);
+        assert!(server.warm_counts().iter().all(|&n| n >= 1));
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_artifact_drops_the_channel() {
+        let dag = DagSpec::single(DagId(0), "score", 5 * MS, 100 * MS, 128, 500 * MS);
+        let server = stub_server(1, vec![dag], &[]);
+        assert!(server.submit("nope", vec![1.0], 500_000).recv().is_err());
+        server.shutdown();
+    }
+
+    // ---- PJRT-backed tests (skipped without `make artifacts`) ----
 
     fn artifacts_dir() -> Option<PathBuf> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");

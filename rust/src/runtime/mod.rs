@@ -97,6 +97,16 @@ impl From<xla::Error> for RuntimeError {
 }
 
 impl Manifest {
+    /// An artifact-less manifest — used by servers running on the stub
+    /// executor, where no compiled artifacts exist.
+    pub fn empty() -> Manifest {
+        Manifest {
+            dir: PathBuf::new(),
+            weight_seed: 0,
+            entries: Vec::new(),
+        }
+    }
+
     /// Parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest, RuntimeError> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
@@ -349,6 +359,165 @@ impl Runtime {
     }
 }
 
+// ---------------------------------------------------------------------
+// Executor boundary (DESIGN.md §Coordinator): the seam between the
+// scheduling plane and actual computation. The real-time driver
+// dispatches through these traits, so the same coordinator core can run
+// against PJRT-compiled artifacts or a test stub with no artifacts.
+// ---------------------------------------------------------------------
+
+/// One worker thread's execution backend. Created on the worker's own
+/// thread (PJRT handles are not `Send`; per-thread executors mirror the
+/// paper's per-machine sandboxes: an executable compiled on worker A
+/// cannot serve worker B).
+pub trait WorkerExecutor {
+    /// Cold start: make `artifact` warm here (e.g. HLO parse + compile).
+    fn warm_up(&mut self, artifact: &str) -> Result<(), RuntimeError>;
+
+    /// Whether `artifact` is already warm on this worker.
+    fn is_warm(&self, artifact: &str) -> bool;
+
+    /// Run `artifact` on `input`. Implementations warm up on demand if
+    /// the artifact is not yet warm (the cost lands on this call).
+    fn execute(&mut self, artifact: &str, input: &[f32]) -> Result<Vec<Tensor>, RuntimeError>;
+}
+
+/// Builds one [`WorkerExecutor`] per worker thread. Shared across the
+/// real-time server's threads, hence `Send + Sync`.
+pub trait ExecutorFactory: Send + Sync {
+    fn make(&self, worker: usize) -> Result<Box<dyn WorkerExecutor>, RuntimeError>;
+}
+
+/// PJRT-backed executor: per-worker CPU client + executable cache.
+pub struct XlaExecutor {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl XlaExecutor {
+    pub fn new(dir: PathBuf, manifest: Manifest) -> Result<Self, RuntimeError> {
+        Ok(XlaExecutor {
+            client: xla::PjRtClient::cpu()?,
+            cache: HashMap::new(),
+            dir,
+            manifest,
+        })
+    }
+}
+
+impl WorkerExecutor for XlaExecutor {
+    fn warm_up(&mut self, artifact: &str) -> Result<(), RuntimeError> {
+        if self.cache.contains_key(artifact) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .entry(artifact)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(artifact.to_string()))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| RuntimeError::Manifest("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(artifact.to_string(), exe);
+        Ok(())
+    }
+
+    fn is_warm(&self, artifact: &str) -> bool {
+        self.cache.contains_key(artifact)
+    }
+
+    fn execute(&mut self, artifact: &str, input: &[f32]) -> Result<Vec<Tensor>, RuntimeError> {
+        self.warm_up(artifact)?;
+        let entry = self
+            .manifest
+            .entry(artifact)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(artifact.to_string()))?;
+        let dims: Vec<i64> = entry.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let exe = self.cache.get(artifact).expect("warmed above");
+        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(match p.element_type()? {
+                xla::ElementType::F32 => Tensor::F32(p.to_vec::<f32>()?),
+                xla::ElementType::S32 => Tensor::I32(p.to_vec::<i32>()?),
+                xla::ElementType::S64 => Tensor::I64(p.to_vec::<i64>()?),
+                other => return Err(RuntimeError::Xla(format!("output type {other:?}"))),
+            });
+        }
+        Ok(out)
+    }
+}
+
+/// Factory for [`XlaExecutor`]s over one artifact directory.
+pub struct XlaExecutorFactory {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ExecutorFactory for XlaExecutorFactory {
+    fn make(&self, _worker: usize) -> Result<Box<dyn WorkerExecutor>, RuntimeError> {
+        Ok(Box::new(XlaExecutor::new(
+            self.dir.clone(),
+            self.manifest.clone(),
+        )?))
+    }
+}
+
+/// Deterministic stand-in executor: no artifacts, no PJRT. `warm_up`
+/// sleeps `setup_cost` (the real compile's stand-in), `execute` sleeps
+/// `exec_cost` and returns `[sum(input)]` so callers can verify data
+/// flow. Drives the real-time platform in tests and demos.
+pub struct StubExecutor {
+    warm: std::collections::HashSet<String>,
+    setup_cost: std::time::Duration,
+    exec_cost: std::time::Duration,
+}
+
+impl WorkerExecutor for StubExecutor {
+    fn warm_up(&mut self, artifact: &str) -> Result<(), RuntimeError> {
+        if self.warm.insert(artifact.to_string()) && !self.setup_cost.is_zero() {
+            std::thread::sleep(self.setup_cost);
+        }
+        Ok(())
+    }
+
+    fn is_warm(&self, artifact: &str) -> bool {
+        self.warm.contains(artifact)
+    }
+
+    fn execute(&mut self, artifact: &str, input: &[f32]) -> Result<Vec<Tensor>, RuntimeError> {
+        self.warm_up(artifact)?;
+        if !self.exec_cost.is_zero() {
+            std::thread::sleep(self.exec_cost);
+        }
+        Ok(vec![Tensor::F32(vec![input.iter().sum()])])
+    }
+}
+
+/// Factory for [`StubExecutor`]s with fixed per-operation costs.
+#[derive(Debug, Clone, Default)]
+pub struct StubExecutorFactory {
+    pub setup_cost: std::time::Duration,
+    pub exec_cost: std::time::Duration,
+}
+
+impl ExecutorFactory for StubExecutorFactory {
+    fn make(&self, _worker: usize) -> Result<Box<dyn WorkerExecutor>, RuntimeError> {
+        Ok(Box::new(StubExecutor {
+            warm: Default::default(),
+            setup_cost: self.setup_cost,
+            exec_cost: self.exec_cost,
+        }))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +525,19 @@ mod tests {
     fn artifacts_dir() -> Option<PathBuf> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn stub_executor_tracks_warmth_and_sums_input() {
+        let factory = StubExecutorFactory::default();
+        let mut exec = factory.make(0).unwrap();
+        assert!(!exec.is_warm("f"));
+        exec.warm_up("f").unwrap();
+        assert!(exec.is_warm("f"));
+        let out = exec.execute("f", &[1.0, 2.0, 3.5]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[6.5]);
+        assert!(exec.is_warm("f"));
+        assert!(!exec.is_warm("g"));
     }
 
     #[test]

@@ -130,6 +130,14 @@ impl SchedQueue {
                 seq,
             },
         };
+        self.push_with_key(key, q);
+    }
+
+    /// Insert with an explicit key — used to reinsert entries skipped by
+    /// [`Self::pop_feasible`] without losing their place in line (under
+    /// FIFO the key *is* the arrival sequence, so re-keying would demote
+    /// an infeasible-once job behind everything that arrived after it).
+    fn push_with_key(&mut self, key: HeapKey, q: QueuedFn) {
         let slot = match self.free_slots.pop() {
             Some(s) => {
                 self.slots[s] = Some(q);
@@ -146,11 +154,15 @@ impl SchedQueue {
 
     /// Pop the most urgent queued function.
     pub fn pop(&mut self) -> Option<QueuedFn> {
-        let Reverse((_, slot)) = self.heap.pop()?;
+        self.pop_with_key().map(|(_, q)| q)
+    }
+
+    fn pop_with_key(&mut self) -> Option<(HeapKey, QueuedFn)> {
+        let Reverse((key, slot)) = self.heap.pop()?;
         let q = self.slots[slot].take().expect("heap/slot consistency");
         self.free_slots.push(slot);
         self.len -= 1;
-        Some(q)
+        Some((key, q))
     }
 
     /// Pop the most urgent function that satisfies `feasible`, scanning at
@@ -163,22 +175,22 @@ impl SchedQueue {
         max_scan: usize,
         mut feasible: impl FnMut(&QueuedFn) -> bool,
     ) -> Option<QueuedFn> {
-        let mut skipped: Vec<QueuedFn> = Vec::new();
+        let mut skipped: Vec<(HeapKey, QueuedFn)> = Vec::new();
         let mut found = None;
         for _ in 0..max_scan {
-            match self.pop() {
+            match self.pop_with_key() {
                 None => break,
-                Some(q) => {
+                Some((key, q)) => {
                     if feasible(&q) {
                         found = Some(q);
                         break;
                     }
-                    skipped.push(q);
+                    skipped.push((key, q));
                 }
             }
         }
-        for q in skipped {
-            self.push(q);
+        for (key, q) in skipped {
+            self.push_with_key(key, q);
         }
         found
     }
@@ -264,6 +276,36 @@ mod tests {
         assert_eq!(q.len(), 1);
         // the skipped one is still there with its original priority
         assert_eq!(q.pop().unwrap().req, RequestId(1));
+    }
+
+    #[test]
+    fn fifo_skipped_entry_keeps_its_place_in_line() {
+        // Regression: reinserting a skipped entry used to assign a fresh
+        // seq, so under FIFO an infeasible-once job silently lost its
+        // place behind later arrivals.
+        let mut q = SchedQueue::new(SchedPolicy::Fifo);
+        q.push(qf(1, 1000, 100)); // arrived first, infeasible this round
+        q.push(qf(2, 1000, 100));
+        q.push(qf(3, 1000, 100));
+        let got = q.pop_feasible(8, |c| c.req != RequestId(1)).unwrap();
+        assert_eq!(got.req, RequestId(2));
+        // request 1 must still be ahead of request 3
+        assert_eq!(q.pop().unwrap().req, RequestId(1));
+        assert_eq!(q.pop().unwrap().req, RequestId(3));
+    }
+
+    #[test]
+    fn srsf_skipped_entry_keeps_original_tie_order() {
+        // Same guarantee under SRSF: a skipped entry ties with an equal-
+        // key peer by its *original* arrival seq, not the reinsert time.
+        let mut q = SchedQueue::new(SchedPolicy::Srsf);
+        q.push(qf(1, 1000, 100)); // key 900, seq 0
+        q.push(qf(2, 500, 100)); // key 400, feasible
+        q.push(qf(3, 1000, 100)); // key 900, seq 2
+        let got = q.pop_feasible(8, |c| c.req != RequestId(1)).unwrap();
+        assert_eq!(got.req, RequestId(2));
+        assert_eq!(q.pop().unwrap().req, RequestId(1), "original seq wins tie");
+        assert_eq!(q.pop().unwrap().req, RequestId(3));
     }
 
     #[test]

@@ -1,0 +1,100 @@
+//! Golden pin for the simulator: `simulate`'s `SummaryRow` for a fixed
+//! seed/config must not drift across refactors (the coordinator
+//! extraction is behavior-preserving by construction; this test keeps it
+//! that way).
+//!
+//! Snapshot protocol (bless-style):
+//! * `rust/tests/golden/simulate_w2_seed42.json` present → the run must
+//!   match it field-for-field.
+//! * absent → the run records it and passes (first run on a fresh
+//!   machine); commit the file to pin behavior.
+//! * `ARCHIPELAGO_BLESS=1` → rewrite the snapshot after an intentional
+//!   behavior change.
+
+use std::path::PathBuf;
+
+use archipelago::config::{Config, SEC};
+use archipelago::metrics::SummaryRow;
+use archipelago::platform::{SimOptions, SimPlatform};
+use archipelago::util::json::{self, Json};
+use archipelago::workload::{macro_mix, WorkloadKind};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/simulate_w2_seed42.json")
+}
+
+fn fixed_run() -> (SummaryRow, u64) {
+    let mut cfg = Config::default();
+    cfg.cluster.num_sgs = 2;
+    cfg.cluster.workers_per_sgs = 2;
+    cfg.cluster.cores_per_worker = 4;
+    cfg.cluster.proactive_pool_mb = 4 * 1024;
+    let apps = macro_mix(WorkloadKind::W2, 1, 0.05, 42);
+    let opts = SimOptions {
+        seed: 42,
+        horizon: 20 * SEC,
+        warmup: 5 * SEC,
+        ..SimOptions::default()
+    };
+    let mut p = SimPlatform::new(cfg, apps, opts);
+    let row = p.run();
+    (row, p.events_dispatched())
+}
+
+fn row_to_json(row: &SummaryRow, events: u64) -> String {
+    json::obj(vec![
+        ("completed", Json::Int(row.completed as i64)),
+        ("p50_us", Json::Int(row.p50 as i64)),
+        ("p90_us", Json::Int(row.p90 as i64)),
+        ("p99_us", Json::Int(row.p99 as i64)),
+        ("p999_us", Json::Int(row.p999 as i64)),
+        ("max_us", Json::Int(row.max as i64)),
+        ("deadline_met_rate", Json::Num(row.deadline_met_rate)),
+        ("cold_starts", Json::Int(row.cold_starts as i64)),
+        ("qdelay_p50_us", Json::Int(row.qdelay_p50 as i64)),
+        ("qdelay_p99_us", Json::Int(row.qdelay_p99 as i64)),
+        ("qdelay_p999_us", Json::Int(row.qdelay_p999 as i64)),
+        ("events_dispatched", Json::Int(events as i64)),
+    ])
+    .to_pretty()
+}
+
+#[test]
+fn simulate_summary_matches_golden_snapshot() {
+    let (row, events) = fixed_run();
+    let actual = row_to_json(&row, events);
+    let path = golden_path();
+    let bless = matches!(
+        std::env::var("ARCHIPELAGO_BLESS"),
+        Ok(v) if !v.is_empty() && v != "0"
+    );
+    match std::fs::read_to_string(&path) {
+        Ok(expected) if !bless => {
+            assert_eq!(
+                actual.trim(),
+                expected.trim(),
+                "simulate SummaryRow drifted from the golden snapshot at {} — \
+                 if the change is intentional, regenerate with ARCHIPELAGO_BLESS=1",
+                path.display()
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &actual).unwrap();
+            eprintln!("recorded golden snapshot at {}", path.display());
+        }
+    }
+}
+
+#[test]
+fn simulate_is_bit_deterministic_across_runs() {
+    // Full-field equality of two identical runs — a machine-independent
+    // behavior pin that backs the snapshot above.
+    let (a, ea) = fixed_run();
+    let (b, eb) = fixed_run();
+    assert_eq!(a, b, "identical seed/config must reproduce every field");
+    assert_eq!(ea, eb, "event counts must match too");
+    // sanity: the fixed workload actually exercises the system
+    assert!(a.completed > 100, "completed {}", a.completed);
+    assert!(a.cold_starts > 0 || a.deadline_met_rate > 0.5);
+}

@@ -57,7 +57,7 @@ fn config_dag_platform_metrics_pipeline() {
     // E2E must include both stages (80ms nominal, ±5% exec noise)
     assert!(row.p50 >= 75 * MS, "p50 {}", row.p50);
     // metrics serialize to valid JSON
-    let j = p.metrics.to_json().to_string();
+    let j = p.metrics().to_json().to_string();
     let parsed = json::parse(&j).unwrap();
     assert_eq!(
         parsed.get("completed").unwrap().as_u64(),
