@@ -1,0 +1,136 @@
+//! Scheduling-plane scale bench (ISSUE 3): sustained `submit_dag`
+//! throughput against the stub executor at 1/2/4/8 submitter threads,
+//! comparing the **global-lock baseline** (one coordinator shard — all
+//! submitters, workers, and completions serialize on a single mutex,
+//! exactly the pre-sharding architecture) against the **sharded**
+//! configuration (4 shards, one lock each) *in the same run*, with the
+//! same total worker count. Writes `BENCH_scale.json` so perf PRs have
+//! an in-repo anchor for the multi-core scheduling win.
+//!
+//! The stub executor costs ~zero, so throughput is bounded by the
+//! scheduling plane itself: admission routing, SRSF push/pop, dispatch,
+//! and completion bookkeeping — the paths the per-shard locks decouple.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use archipelago::config::{SchedPolicy, MS};
+use archipelago::dag::{DagId, DagSpec};
+use archipelago::platform::realtime::{RtOptions, Server};
+use archipelago::runtime::{Manifest, StubExecutorFactory};
+use archipelago::util::json::{self, Json};
+
+/// DAG population: enough distinct DAGs that the ring spreads them over
+/// every shard in the sharded configuration.
+const NUM_DAGS: u32 = 16;
+/// In-flight window per submitter (pipelining keeps the scheduling
+/// plane saturated instead of measuring reply-channel round-trips).
+const WINDOW: usize = 16;
+/// Requests per submitter thread per configuration.
+const PER_SUBMITTER: usize = 1_600;
+/// Total worker threads in every configuration (fair capacity).
+const TOTAL_WORKERS: usize = 8;
+
+fn start_server(num_sgs: usize) -> Server {
+    let dags: Vec<DagSpec> = (0..NUM_DAGS)
+        .map(|i| DagSpec::single(DagId(i), &format!("fn{i}"), MS, 10 * MS, 128, 10_000 * MS))
+        .collect();
+    let factory = Arc::new(StubExecutorFactory {
+        setup_cost: Duration::ZERO,
+        exec_cost: Duration::ZERO,
+    });
+    let opts = RtOptions {
+        num_sgs,
+        workers: TOTAL_WORKERS / num_sgs,
+        policy: SchedPolicy::Srsf,
+        background_ticks: false,
+        pool_mb: 4 * 1024,
+    };
+    Server::start_with(factory, dags, opts, &[], Manifest::empty()).expect("server start")
+}
+
+/// Sustained submit_dag throughput (requests/sec) for one configuration.
+fn throughput(num_sgs: usize, submitters: usize) -> f64 {
+    let server = start_server(num_sgs);
+    // Touch every DAG once so the measured phase is steady-state (no
+    // cold-start compiles on the clock).
+    for i in 0..NUM_DAGS {
+        server
+            .submit_dag(DagId(i), vec![1.0], 10_000_000)
+            .recv()
+            .expect("warmup completion");
+    }
+    let total = submitters * PER_SUBMITTER;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..submitters {
+            let server = &server;
+            s.spawn(move || {
+                let mut rxs = Vec::with_capacity(WINDOW);
+                let mut sent = 0usize;
+                while sent < PER_SUBMITTER {
+                    let burst = WINDOW.min(PER_SUBMITTER - sent);
+                    for i in 0..burst {
+                        let n = t * PER_SUBMITTER + sent + i;
+                        let dag = DagId((n % NUM_DAGS as usize) as u32);
+                        rxs.push(server.submit_dag(dag, vec![t as f32], 10_000_000));
+                    }
+                    sent += burst;
+                    for rx in rxs.drain(..) {
+                        let c = rx.recv().expect("completion");
+                        assert!(c.deadline_met, "10s deadline vs ~zero-cost work");
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let row = server.summary();
+    assert_eq!(row.completed, (total + NUM_DAGS as usize) as u64);
+    server.shutdown();
+    total as f64 / wall
+}
+
+fn main() {
+    println!("== scheduling-plane scale bench ==");
+    println!(
+        "{TOTAL_WORKERS} worker threads total; baseline = 1 shard (global lock), \
+         sharded = 4 shards (one lock each); {NUM_DAGS} DAGs, window {WINDOW}"
+    );
+    let mut rows = Vec::new();
+    let mut speedup_at_4 = 0.0;
+    for &threads in &[1usize, 2, 4, 8] {
+        let baseline = throughput(1, threads);
+        let sharded = throughput(4, threads);
+        let speedup = sharded / baseline.max(1e-9);
+        if threads == 4 {
+            speedup_at_4 = speedup;
+        }
+        println!(
+            "submitters={threads}: baseline {baseline:>9.0} req/s | sharded {sharded:>9.0} req/s \
+             | {speedup:.2}x"
+        );
+        rows.push(json::obj(vec![
+            ("submitters", Json::Int(threads as i64)),
+            ("baseline_rps", Json::Num(baseline)),
+            ("sharded_rps", Json::Num(sharded)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    let out = json::obj(vec![
+        ("bench", Json::Str("scale".into())),
+        ("total_workers", Json::Int(TOTAL_WORKERS as i64)),
+        ("baseline_num_sgs", Json::Int(1)),
+        ("sharded_num_sgs", Json::Int(4)),
+        ("num_dags", Json::Int(NUM_DAGS as i64)),
+        ("requests_per_submitter", Json::Int(PER_SUBMITTER as i64)),
+        ("window", Json::Int(WINDOW as i64)),
+        ("speedup_at_4_threads", Json::Num(speedup_at_4)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_scale.json";
+    match std::fs::write(path, out.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -314,6 +314,12 @@ impl DagRegistry {
         &self.dags[id.0 as usize]
     }
 
+    /// Fallible lookup for externally supplied ids (e.g. a request for
+    /// a DAG that was never uploaded).
+    pub fn try_get(&self, id: DagId) -> Option<&DagSpec> {
+        self.dags.get(id.0 as usize)
+    }
+
     pub fn len(&self) -> usize {
         self.dags.len()
     }
@@ -456,6 +462,8 @@ mod tests {
         assert_eq!(reg.get(a).name, "a");
         assert_eq!(reg.get(b).id, DagId(1));
         assert_eq!(reg.len(), 2);
+        assert!(reg.try_get(DagId(1)).is_some());
+        assert!(reg.try_get(DagId(2)).is_none());
     }
 
     #[test]

@@ -154,10 +154,17 @@ impl Lbs {
             .unwrap_or_default()
     }
 
-    /// Route one request (§5.2.3). Requires the DAG to be registered.
+    /// Route one request (§5.2.3). A DAG never seen before is
+    /// auto-registered to its ring primary — routing is total, so a
+    /// race between upload and first request (or a caller skipping
+    /// [`Self::register_dag`]) degrades to first-touch registration
+    /// instead of a panic that takes the server down.
     pub fn route(&mut self, dag: DagId) -> SgsId {
         self.routes += 1;
-        let d = self.dags.get(&dag).expect("route before register_dag");
+        if !self.dags.contains_key(&dag) {
+            self.register_dag(dag);
+        }
+        let d = self.dags.get(&dag).expect("registered above");
         let choice = match self.cfg.scale_out_mode {
             ScaleOutMode::Gradual => {
                 let entry = |s: &SgsId| {
@@ -360,6 +367,23 @@ mod tests {
         let b = l.register_dag(DagId(1));
         assert_eq!(a, b);
         assert_eq!(l.active_sgs(DagId(1)), &[a]);
+    }
+
+    #[test]
+    fn route_before_register_auto_registers() {
+        // Regression: this used to panic ("route before register_dag")
+        // and take the realtime server down with it.
+        let mut l = lbs(4);
+        let s = l.route(DagId(7));
+        assert_eq!(l.active_sgs(DagId(7)), &[s], "first touch registered");
+        // stable afterwards: the same single-SGS association routes
+        // every subsequent request
+        for _ in 0..10 {
+            assert_eq!(l.route(DagId(7)), s);
+        }
+        // and matches what explicit registration would have picked
+        let mut l2 = lbs(4);
+        assert_eq!(l2.register_dag(DagId(7)), s);
     }
 
     #[test]

@@ -204,7 +204,8 @@ fn cmd_figures(raw: &[String]) -> Result<(), CliError> {
 fn cmd_serve(raw: &[String]) -> Result<(), CliError> {
     let cmd = Command::new("serve", "real-time serving demo (PJRT or stub executor)")
         .opt("artifacts", "artifact directory (default artifacts)")
-        .opt("workers", "worker threads (default 2)")
+        .opt("workers", "worker threads per SGS shard (default 2)")
+        .opt("sgs", "coordinator shards, one lock each; --stub mode (default 2)")
         .opt("requests", "demo requests to push (default 200)")
         .opt("policy", "srsf | fifo (default srsf)")
         .flag(
@@ -213,6 +214,7 @@ fn cmd_serve(raw: &[String]) -> Result<(), CliError> {
         );
     let args = cmd.parse(raw)?;
     let workers = args.get_u64("workers", 2)? as usize;
+    let num_sgs = args.get_u64("sgs", 2)? as usize;
     let n = args.get_u64("requests", 200)?;
     let policy = match args.get_or("policy", "srsf") {
         "srsf" => SchedPolicy::Srsf,
@@ -220,7 +222,7 @@ fn cmd_serve(raw: &[String]) -> Result<(), CliError> {
         other => return Err(CliError(format!("--policy must be srsf|fifo, got '{other}'"))),
     };
     if args.has("stub") {
-        return serve_stub_demo(workers, n, policy);
+        return serve_stub_demo(workers, num_sgs, n, policy);
     }
     let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
     if !dir.join("manifest.json").exists() {
@@ -254,9 +256,15 @@ fn cmd_serve(raw: &[String]) -> Result<(), CliError> {
 }
 
 /// `serve --stub`: the wall-clock platform end-to-end — single-function
-/// and 3-stage DAG requests through the shared coordinator — with the
-/// stub executor standing in for PJRT.
-fn serve_stub_demo(workers: usize, n: u64, policy: SchedPolicy) -> Result<(), CliError> {
+/// and 3-stage DAG requests through the sharded coordinator (`num_sgs`
+/// shards, one lock each) — with the stub executor standing in for
+/// PJRT.
+fn serve_stub_demo(
+    workers: usize,
+    num_sgs: usize,
+    n: u64,
+    policy: SchedPolicy,
+) -> Result<(), CliError> {
     use archipelago::config::MS;
     use archipelago::dag::{DagId, DagSpec};
     use archipelago::platform::realtime::RtOptions;
@@ -282,11 +290,15 @@ fn serve_stub_demo(workers: usize, n: u64, policy: SchedPolicy) -> Result<(), Cl
         exec_cost: Duration::from_millis(2),
     });
     let opts = RtOptions {
+        num_sgs,
         workers,
         policy,
         ..RtOptions::default()
     };
-    println!("starting stub server: {workers} workers, {policy:?}, DAGs: score, pipeline(3)");
+    println!(
+        "starting stub server: {num_sgs} SGS shards x {workers} workers, {policy:?}, \
+         DAGs: score, pipeline(3)"
+    );
     let server = Server::start_with(factory, dags, opts, &["score"], Manifest::empty())
         .map_err(|e| CliError(e.to_string()))?;
     let pipeline = server

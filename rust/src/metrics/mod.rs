@@ -58,6 +58,18 @@ impl Default for GroupStats {
 }
 
 impl GroupStats {
+    /// Fold another group's counters and histograms into this one.
+    /// Exact: histogram buckets and counters add, so a merge of
+    /// per-shard stats equals the stats a single global collector would
+    /// have produced, regardless of merge order.
+    pub fn merge(&mut self, other: &GroupStats) {
+        self.e2e.merge(&other.e2e);
+        self.qdelay.merge(&other.qdelay);
+        self.completed += other.completed;
+        self.deadlines_met += other.deadlines_met;
+        self.cold_starts += other.cold_starts;
+    }
+
     pub fn deadline_met_rate(&self) -> f64 {
         if self.completed == 0 {
             return 1.0;
@@ -115,6 +127,35 @@ impl Metrics {
         }
         self.intervals[idx].0 += u64::from(met);
         self.intervals[idx].1 += 1;
+    }
+
+    /// Fold another collector into this one (the sharded coordinator's
+    /// read path: each shard records into its own `Metrics`, merged on
+    /// demand). Commutative and associative, with the empty collector
+    /// as identity — both merge orders yield identical summaries. The
+    /// two collectors must use the same `interval_len`; an empty
+    /// collector adopts the other's.
+    pub fn merge(&mut self, other: &Metrics) {
+        debug_assert!(
+            self.interval_len == 0
+                || other.interval_len == 0
+                || self.interval_len == other.interval_len,
+            "merging metrics with different interval lengths"
+        );
+        if self.interval_len == 0 {
+            self.interval_len = other.interval_len;
+        }
+        self.total.merge(&other.total);
+        for (id, g) in &other.per_dag {
+            self.per_dag.entry(*id).or_default().merge(g);
+        }
+        if self.intervals.len() < other.intervals.len() {
+            self.intervals.resize(other.intervals.len(), (0, 0));
+        }
+        for (i, &(met, n)) in other.intervals.iter().enumerate() {
+            self.intervals[i].0 += met;
+            self.intervals[i].1 += n;
+        }
     }
 
     /// Record one function's queuing delay.
@@ -325,6 +366,79 @@ mod tests {
         assert_eq!(j.get("completed").unwrap().as_i64(), Some(100));
         assert!(j.get("per_dag").unwrap().as_arr().unwrap().len() == 1);
         assert!(row.format_line("test").contains("met=100.00%"));
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut m = Metrics::new();
+        for i in 1..=50u64 {
+            m.record_completion(&outcome(0, i * SEC / 10, i * MS, 200 * MS, i as u32 % 2));
+            m.record_qdelay(DagId(0), i * 100);
+        }
+        let before = m.summary_row();
+        let rates_before = m.interval_met_rates();
+
+        // identity on the right: m ∪ ∅ = m
+        m.merge(&Metrics::new());
+        assert_eq!(m.summary_row(), before);
+        assert_eq!(m.interval_met_rates(), rates_before);
+
+        // identity on the left: ∅ ∪ m = m
+        let mut empty = Metrics::new();
+        empty.merge(&m);
+        assert_eq!(empty.summary_row(), before);
+        assert_eq!(empty.interval_met_rates(), rates_before);
+        assert_eq!(empty.dag(DagId(0)).unwrap().completed, 50);
+    }
+
+    #[test]
+    fn merge_is_order_independent_and_matches_global_collector() {
+        // Record the same outcome stream (a) into one global collector
+        // and (b) split across two "shards", then merge both ways: all
+        // three must agree field-for-field, percentiles and interval
+        // rates included.
+        let outcomes: Vec<RequestOutcome> = (1..=200u64)
+            .map(|i| {
+                outcome(
+                    (i % 3) as u32,
+                    i * SEC / 20,
+                    (i * i * 7) % (500 * MS) + 1,
+                    100 * MS,
+                    (i % 4) as u32,
+                )
+            })
+            .collect();
+        let mut global = Metrics::new();
+        let mut shard_a = Metrics::new();
+        let mut shard_b = Metrics::new();
+        for (i, o) in outcomes.iter().enumerate() {
+            global.record_completion(o);
+            global.record_qdelay(o.dag, (i as u64 * 31) % 10_000);
+            let shard = if i % 2 == 0 { &mut shard_a } else { &mut shard_b };
+            shard.record_completion(o);
+            shard.record_qdelay(o.dag, (i as u64 * 31) % 10_000);
+        }
+        let mut ab = Metrics::new();
+        ab.merge(&shard_a);
+        ab.merge(&shard_b);
+        let mut ba = Metrics::new();
+        ba.merge(&shard_b);
+        ba.merge(&shard_a);
+        assert_eq!(ab.summary_row(), global.summary_row());
+        assert_eq!(ba.summary_row(), global.summary_row());
+        assert_eq!(ab.interval_met_rates(), global.interval_met_rates());
+        assert_eq!(ba.interval_met_rates(), global.interval_met_rates());
+        for id in 0..3u32 {
+            let (g, a, b) = (
+                global.dag(DagId(id)).unwrap(),
+                ab.dag(DagId(id)).unwrap(),
+                ba.dag(DagId(id)).unwrap(),
+            );
+            assert_eq!(a.completed, g.completed);
+            assert_eq!(b.completed, g.completed);
+            assert_eq!(a.e2e.tail_summary(), g.e2e.tail_summary());
+            assert_eq!(b.qdelay.tail_summary(), g.qdelay.tail_summary());
+        }
     }
 
     #[test]

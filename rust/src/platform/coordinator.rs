@@ -1,20 +1,33 @@
-//! The driver-agnostic coordinator core (DESIGN.md §Coordinator).
+//! The driver-agnostic coordinator core, sharded (DESIGN.md §Coordinator,
+//! §Sharding).
 //!
 //! The paper's central claim is that one scheduling architecture
 //! (LBS → SGS → worker pool, §3 Fig 3) serves both as a simulated
-//! cluster and a real deployment. This module is that architecture with
-//! time abstracted out: the request table, DAG fan-out on completion,
-//! the warm-aware dispatch drain, and §6.1 failure re-routing all live
-//! here, and every method takes `now` and appends [`Effect`]s to a
-//! buffer instead of scheduling events or spawning work itself.
+//! cluster and a real deployment — and that each SGS schedules its
+//! worker pool *independently* (§5). The core mirrors that split:
 //!
-//! A *driver* owns the clock and turns effects into its own notion of
-//! time: the discrete-event engine ([`super::SimPlatform`]) maps
-//! `Dispatched { dispatch.finish_at }` to a future `FnComplete` event,
-//! while the wall-clock runtime ([`super::realtime`]) hands the same
-//! effect to a worker thread and calls [`Coordinator::fn_complete`]
-//! when the real execution returns. Both exercise the identical
-//! scheduling code, so a policy change lands in one place.
+//! * [`Front`] — the routing front-end: LBS, DAG registry, request-ID
+//!   allocation, and admission. It never touches a worker pool.
+//! * [`Shard`] — one SGS plus everything whose lifetime is tied to it:
+//!   the request states routed there, a per-shard [`Metrics`] (merged on
+//!   read), and the dispatch loop.
+//!
+//! Neither owns a clock or a thread: every method takes `now` and
+//! appends [`Effect`]s to a buffer. Cross-shard work — downstream
+//! fan-out after a migration, §6.1 failure re-routing — travels as
+//! effects too ([`Effect::Reroute`], [`Effect::Advance`]), so a driver
+//! can hold at most one shard's state at a time. The wall-clock driver
+//! ([`super::realtime`]) exploits exactly that: one mutex per shard, a
+//! short-critical-section lock on the front, admits to different SGSs
+//! running fully in parallel. The discrete-event driver
+//! ([`super::SimPlatform`]) goes through the single-threaded
+//! [`Coordinator`] facade, which applies effects in the pre-shard push
+//! order so simulation results stay bit-identical by construction;
+//! `rust/tests/golden_sim.rs` pins that behavior for every refactor
+//! after the snapshot is first committed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::config::{Config, Micros};
 use crate::dag::{DagId, DagRegistry, FnId};
@@ -24,9 +37,9 @@ use crate::sgs::{QueuedFn, RequestId, Sgs, SgsId};
 use crate::util::fasthash::FastMap;
 use crate::worker::WorkerId;
 
-/// An instruction from the coordinator to its driver. Effects are
-/// appended in a deterministic order; drivers must apply them in that
-/// order (the discrete-event engine's determinism depends on it).
+/// An instruction from the core to its driver. Effects are appended in
+/// a deterministic order; drivers must apply them in that order (the
+/// discrete-event engine's determinism depends on it).
 #[derive(Debug, Clone)]
 pub enum Effect {
     /// Deliver `queued` to `sgs` at absolute time `at` (a routing hop:
@@ -49,7 +62,7 @@ pub enum Effect {
     /// A proactive sandbox setup began; it becomes warm at
     /// `setup.done_at` (virtual) or when the executor finishes compiling
     /// (wall-clock), at which point the driver calls
-    /// [`Coordinator::setup_done`].
+    /// [`Shard::setup_done`].
     SetupStarted {
         sgs: SgsId,
         epoch: u64,
@@ -61,9 +74,28 @@ pub enum Effect {
         req: RequestId,
         outcome: RequestOutcome,
     },
+    /// A shard refused `queued` (its SGS is fail-stopped): the front
+    /// must pick a live SGS (§6.1). Resolved by [`Front::reroute`] into
+    /// an `Enqueue` after the routing overhead.
+    Reroute {
+        from: SgsId,
+        queued: QueuedFn,
+        is_root: bool,
+    },
+    /// A function completion arrived at a shard whose request state has
+    /// migrated (§6.1 SGS failure): forward the DAG advancement to the
+    /// request's new home shard. `lost` marks a stale-epoch completion
+    /// whose execution must be re-enqueued instead.
+    Advance {
+        sgs: SgsId,
+        req: RequestId,
+        f: FnId,
+        lost: bool,
+    },
 }
 
-/// Per-request in-flight bookkeeping (the request table).
+/// Per-request in-flight bookkeeping (one entry of a shard's request
+/// table).
 #[derive(Debug)]
 pub struct RequestState {
     pub dag: DagId,
@@ -80,47 +112,51 @@ pub struct RequestState {
     exec_times: Vec<Micros>,
 }
 
-/// The platform-agnostic scheduling core: LBS + SGSs + request table.
-pub struct Coordinator {
-    pub cfg: Config,
-    pub registry: DagRegistry,
-    pub lbs: Lbs,
-    pub sgss: Vec<Sgs>,
-    pub metrics: Metrics,
-    requests: FastMap<u64, RequestState>,
-    next_req: u64,
-    /// Completions before this time are excluded from metrics.
-    warmup: Micros,
-    /// Reused dispatch buffer (hot path, avoids per-event allocation).
-    dispatch_buf: Vec<crate::sgs::Dispatch>,
+/// Build the queue entry for one runnable function of a request.
+fn make_queued(
+    registry: &DagRegistry,
+    state: &RequestState,
+    req: RequestId,
+    dag_id: DagId,
+    fn_idx: u16,
+    enqueued_at: Micros,
+) -> QueuedFn {
+    let dag = registry.get(dag_id);
+    let spec = &dag.functions[fn_idx as usize];
+    QueuedFn {
+        req,
+        f: dag.fn_id(fn_idx),
+        dag: dag_id,
+        enqueued_at,
+        deadline_abs: state.deadline_abs,
+        remaining_work: dag.cpl[fn_idx as usize],
+        exec_time: state.exec_times[fn_idx as usize],
+        setup_time: spec.setup_time,
+        mem_mb: spec.mem_mb,
+    }
 }
 
-impl Coordinator {
-    /// Build the core over an already-populated DAG registry.
-    pub fn new(cfg: Config, registry: DagRegistry, warmup: Micros, seed: u64) -> Self {
-        cfg.validate().expect("invalid config");
-        let sgss: Vec<Sgs> = (0..cfg.cluster.num_sgs)
-            .map(|i| {
-                Sgs::new(
-                    SgsId(i as u16),
-                    cfg.cluster.workers_per_sgs,
-                    cfg.cluster.cores_per_worker,
-                    cfg.cluster.proactive_pool_mb,
-                    cfg.sgs.clone(),
-                )
-            })
-            .collect();
+/// The routing front-end: LBS + DAG registry + request-ID allocation +
+/// admission. Holds no per-SGS state, so its critical sections are a
+/// route draw and a handful of pushes — the wall-clock driver keeps it
+/// behind its own short lock while shards run in parallel.
+pub struct Front {
+    pub cfg: Config,
+    pub registry: Arc<DagRegistry>,
+    pub lbs: Lbs,
+    /// Globally unique request ids; atomic so allocation never needs the
+    /// routing lock.
+    next_req: AtomicU64,
+}
+
+impl Front {
+    pub fn new(cfg: Config, registry: Arc<DagRegistry>, seed: u64) -> Self {
         let lbs = Lbs::new(cfg.lbs.clone(), cfg.cluster.num_sgs, seed);
-        Coordinator {
+        Front {
+            cfg,
             registry,
             lbs,
-            sgss,
-            metrics: Metrics::new(),
-            requests: FastMap::default(),
-            next_req: 0,
-            warmup,
-            cfg,
-            dispatch_buf: Vec::new(),
+            next_req: AtomicU64::new(0),
         }
     }
 
@@ -132,30 +168,11 @@ impl Coordinator {
         }
     }
 
-    pub fn sgs(&self, id: SgsId) -> &Sgs {
-        &self.sgss[id.0 as usize]
-    }
-
-    pub fn sgs_count(&self) -> usize {
-        self.sgss.len()
-    }
-
-    pub fn total_cold_starts(&self) -> u64 {
-        self.sgss.iter().map(|s| s.cold_starts()).sum()
-    }
-
-    /// Requests currently in flight.
-    pub fn inflight(&self) -> usize {
-        self.requests.len()
-    }
-
-    pub fn request(&self, req: RequestId) -> Option<&RequestState> {
-        self.requests.get(&req.0)
-    }
-
-    /// Admit a new request for `dag_id`: allocate it in the request
-    /// table, route it through the LBS, and emit `Enqueue` effects for
-    /// the DAG's root functions after the routing overhead.
+    /// Admit a new request for `dag_id`: allocate its id, route it
+    /// through the LBS, and emit `Enqueue` effects for the DAG's root
+    /// functions after the routing overhead. Returns the request state
+    /// for the caller to install on the home shard (the front never
+    /// touches shard tables), or `None` when the DAG is unknown.
     ///
     /// `exec_times` holds the per-function execution-time estimates for
     /// this request (the simulator samples them with noise; the
@@ -169,11 +186,10 @@ impl Coordinator {
         exec_times: Vec<Micros>,
         deadline: Option<Micros>,
         fx: &mut Vec<Effect>,
-    ) -> RequestId {
-        let dag = self.registry.get(dag_id);
+    ) -> Option<(RequestId, SgsId, RequestState)> {
+        let dag = self.registry.try_get(dag_id)?;
         debug_assert_eq!(exec_times.len(), dag.len());
-        let req_id = RequestId(self.next_req);
-        self.next_req += 1;
+        let req_id = RequestId(self.next_req.fetch_add(1, Ordering::Relaxed));
         let mut state = RequestState {
             dag: dag_id,
             arrival: now,
@@ -190,7 +206,7 @@ impl Coordinator {
         // Enqueue the roots after the routing overhead.
         let enqueue_at = now + self.cfg.lbs.route_overhead;
         for &root in &self.registry.get(dag_id).roots {
-            let queued = self.make_queued(&state, req_id, dag_id, root, enqueue_at);
+            let queued = make_queued(&self.registry, &state, req_id, dag_id, root, enqueue_at);
             fx.push(Effect::Enqueue {
                 at: enqueue_at,
                 sgs,
@@ -198,70 +214,118 @@ impl Coordinator {
                 is_root: true,
             });
         }
-        self.requests.insert(req_id.0, state);
-        req_id
+        Some((req_id, sgs, state))
     }
 
-    fn make_queued(
-        &self,
-        state: &RequestState,
-        req: RequestId,
-        dag_id: DagId,
-        fn_idx: u16,
-        enqueued_at: Micros,
-    ) -> QueuedFn {
-        let dag = self.registry.get(dag_id);
-        let spec = &dag.functions[fn_idx as usize];
-        QueuedFn {
-            req,
-            f: dag.fn_id(fn_idx),
-            dag: dag_id,
-            enqueued_at,
-            deadline_abs: state.deadline_abs,
-            remaining_work: dag.cpl[fn_idx as usize],
-            exec_time: state.exec_times[fn_idx as usize],
-            setup_time: spec.setup_time,
-            mem_mb: spec.mem_mb,
-        }
-    }
-
-    /// A routed request (or a ready downstream function) reached its
-    /// SGS: enqueue it and drain the dispatch loop. A dead SGS reroutes
-    /// the function through the LBS (§6.1).
-    pub fn enqueue(
+    /// Resolve a [`Effect::Reroute`]: pick a live SGS for a function a
+    /// dead shard refused (§6.1). Dropped when routing lands back on the
+    /// refusing SGS (no live alternative yet).
+    pub fn reroute(
         &mut self,
         now: Micros,
-        sgs: SgsId,
+        from: SgsId,
         queued: QueuedFn,
         is_root: bool,
         fx: &mut Vec<Effect>,
     ) {
-        let s = &mut self.sgss[sgs.0 as usize];
-        if !s.is_alive() {
-            // Failure between routing and enqueue: reroute through LBS.
-            let dag = queued.dag;
-            let alt = self.lbs.route(dag);
-            if alt != sgs {
+        let alt = self.lbs.route(queued.dag);
+        if alt != from {
+            fx.push(Effect::Enqueue {
+                at: now + self.cfg.lbs.route_overhead,
+                sgs: alt,
+                queued,
+                is_root,
+            });
+        }
+    }
+}
+
+/// One coordinator shard: an SGS, the request states homed there, and a
+/// private [`Metrics`] — everything a scheduling decision for this SGS
+/// needs, so a driver can protect each shard with its own lock.
+pub struct Shard {
+    pub sgs: Sgs,
+    pub metrics: Metrics,
+    registry: Arc<DagRegistry>,
+    /// Requests whose home SGS is this shard.
+    requests: FastMap<u64, RequestState>,
+    /// Forwarding addresses for requests migrated away at SGS failure
+    /// (§6.1): straggler completions chase the state via
+    /// [`Effect::Advance`].
+    moved: FastMap<u64, SgsId>,
+    /// Completions before this time are excluded from metrics.
+    warmup: Micros,
+    /// Reused dispatch buffer (hot path, avoids per-event allocation).
+    dispatch_buf: Vec<crate::sgs::Dispatch>,
+}
+
+impl Shard {
+    pub fn new(sgs: Sgs, registry: Arc<DagRegistry>, warmup: Micros) -> Self {
+        Shard {
+            sgs,
+            metrics: Metrics::new(),
+            registry,
+            requests: FastMap::default(),
+            moved: FastMap::default(),
+            warmup,
+            dispatch_buf: Vec::new(),
+        }
+    }
+
+    pub fn id(&self) -> SgsId {
+        self.sgs.id
+    }
+
+    /// Requests currently homed on this shard.
+    pub fn inflight(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn request(&self, req: RequestId) -> Option<&RequestState> {
+        self.requests.get(&req.0)
+    }
+
+    /// Install an admitted (or migrated) request's state. Must happen
+    /// before the driver applies the request's `Enqueue` effects.
+    pub fn install(&mut self, req: RequestId, state: RequestState) {
+        self.moved.remove(&req.0);
+        self.requests.insert(req.0, state);
+    }
+
+    /// A routed request (or a ready downstream function) reached this
+    /// shard: enqueue it and drain the dispatch loop. A dead SGS
+    /// forwards the function to the request's migrated home when it
+    /// knows one (keeping queued work and request state co-located), or
+    /// emits a `Reroute` for the front otherwise (§6.1).
+    pub fn enqueue(&mut self, now: Micros, queued: QueuedFn, is_root: bool, fx: &mut Vec<Effect>) {
+        if !self.sgs.is_alive() {
+            if let Some(&home) = self.moved.get(&queued.req.0) {
                 fx.push(Effect::Enqueue {
-                    at: now + self.cfg.lbs.route_overhead,
-                    sgs: alt,
+                    at: now,
+                    sgs: home,
+                    queued,
+                    is_root,
+                });
+            } else {
+                fx.push(Effect::Reroute {
+                    from: self.sgs.id,
                     queued,
                     is_root,
                 });
             }
             return;
         }
-        s.enqueue(queued, is_root);
-        self.dispatch(now, sgs, fx);
+        self.sgs.enqueue(queued, is_root);
+        self.dispatch(now, fx);
     }
 
     /// Run the SGS dispatch loop and emit `Dispatched` effects.
-    fn dispatch(&mut self, now: Micros, sgs: SgsId, fx: &mut Vec<Effect>) {
-        let s = &mut self.sgss[sgs.0 as usize];
+    fn dispatch(&mut self, now: Micros, fx: &mut Vec<Effect>) {
         let mut dispatches = std::mem::take(&mut self.dispatch_buf);
-        s.try_dispatch_into(now, &mut dispatches);
+        self.sgs.try_dispatch_into(now, &mut dispatches);
+        let sgs = self.sgs.id;
         for d in dispatches.drain(..) {
-            let epoch = s.pool.get(d.worker).epoch();
+            let epoch = self.sgs.pool.get(d.worker).epoch();
             if now >= self.warmup {
                 self.metrics.record_qdelay(d.f.dag, d.queue_delay);
             }
@@ -277,44 +341,91 @@ impl Coordinator {
         self.dispatch_buf = dispatches;
     }
 
-    /// A dispatched function finished on a worker. Advances the
-    /// request's DAG: emits `Enqueue` effects for ready children, a
-    /// `RequestDone` effect when the sink completed, and new
-    /// `Dispatched` effects for the freed core. A stale `epoch` (the
+    /// A dispatched function finished on a worker of this shard. Frees
+    /// the core, then advances the request's DAG ([`Self::advance`]) —
+    /// inline when the request is homed here, as an [`Effect::Advance`]
+    /// when its state migrated at an SGS failure. A stale `epoch` (the
     /// worker failed while the function ran) re-enqueues the function
     /// instead (at-least-once semantics).
-    #[allow(clippy::too_many_arguments)]
     pub fn fn_complete(
         &mut self,
         now: Micros,
-        sgs: SgsId,
         worker: WorkerId,
         epoch: u64,
         req: RequestId,
         f: FnId,
         fx: &mut Vec<Effect>,
     ) {
-        let s = &mut self.sgss[sgs.0 as usize];
-        let current_epoch = s.pool.get(worker).epoch();
-        if current_epoch != epoch || !s.pool.get(worker).is_alive() {
+        let w = self.sgs.pool.get(worker);
+        if w.epoch() != epoch || !w.is_alive() {
             // The worker died while this function ran: the execution is
             // lost; re-enqueue the function (at-least-once semantics).
-            if self.requests.contains_key(&req.0) {
-                let state = &self.requests[&req.0];
-                let queued = self.make_queued(state, req, state.dag, f.idx, now);
-                let target = state.sgs;
-                fx.push(Effect::Enqueue {
-                    at: now,
-                    sgs: target,
-                    queued,
-                    is_root: false,
+            self.advance_or_forward(now, req, f, true, fx);
+            return;
+        }
+        self.sgs.complete(worker, f, now);
+        self.advance_or_forward(now, req, f, false, fx);
+        // The freed core may admit more queued work.
+        self.dispatch(now, fx);
+    }
+
+    fn advance_or_forward(
+        &mut self,
+        now: Micros,
+        req: RequestId,
+        f: FnId,
+        lost: bool,
+        fx: &mut Vec<Effect>,
+    ) {
+        if self.requests.contains_key(&req.0) {
+            self.advance(now, req, f, lost, fx);
+        } else if let Some(&home) = self.moved.get(&req.0) {
+            fx.push(Effect::Advance {
+                sgs: home,
+                req,
+                f,
+                lost,
+            });
+        }
+        // else: the request already finished (duplicate completion after
+        // an at-least-once re-execution) — nothing to advance.
+    }
+
+    /// Advance `req`'s DAG after `f` completed: emit `Enqueue` effects
+    /// for ready children, a `RequestDone` effect when the sink
+    /// completed. With `lost`, re-enqueue `f` instead (the execution
+    /// died with its worker). Re-forwards when the state has migrated
+    /// again.
+    pub fn advance(
+        &mut self,
+        now: Micros,
+        req: RequestId,
+        f: FnId,
+        lost: bool,
+        fx: &mut Vec<Effect>,
+    ) {
+        if !self.requests.contains_key(&req.0) {
+            if let Some(&home) = self.moved.get(&req.0) {
+                fx.push(Effect::Advance {
+                    sgs: home,
+                    req,
+                    f,
+                    lost,
                 });
             }
             return;
         }
-        s.complete(worker, f, now);
-
-        // Advance the request's DAG.
+        if lost {
+            let state = &self.requests[&req.0];
+            let queued = make_queued(&self.registry, state, req, state.dag, f.idx, now);
+            fx.push(Effect::Enqueue {
+                at: now,
+                sgs: state.sgs,
+                queued,
+                is_root: false,
+            });
+            return;
+        }
         let mut finished = false;
         let mut children_ready: Vec<u16> = Vec::new();
         if let Some(state) = self.requests.get_mut(&req.0) {
@@ -351,7 +462,7 @@ impl Coordinator {
             // dependencies are met."
             let target = state.sgs;
             for c in children_ready {
-                let queued = self.make_queued(state, req, state.dag, c, now);
+                let queued = make_queued(&self.registry, state, req, state.dag, c, now);
                 fx.push(Effect::Enqueue {
                     at: now,
                     sgs: target,
@@ -360,13 +471,256 @@ impl Coordinator {
                 });
             }
         }
-        // The freed core may admit more queued work.
-        self.dispatch(now, sgs, fx);
     }
 
     /// A proactive sandbox setup completed: the sandbox becomes warm and
     /// may convert a would-be-cold dispatch. Stale epochs are dropped
     /// (the sandbox was lost with the worker).
+    pub fn setup_done(
+        &mut self,
+        now: Micros,
+        worker: WorkerId,
+        epoch: u64,
+        f: FnId,
+        fx: &mut Vec<Effect>,
+    ) {
+        if self.sgs.pool.get(worker).epoch() != epoch {
+            return; // worker failed mid-setup; sandbox lost
+        }
+        self.sgs.setup_done(worker, f);
+        self.dispatch(now, fx);
+    }
+
+    /// Periodic estimation (§4.3.1): recompute demand, reconcile sandbox
+    /// allocations (emitting `SetupStarted` effects), and return the
+    /// per-DAG reports to piggyback to the LBS (§5.2.1) — the caller
+    /// forwards them to the front, so the shard never needs its lock. A
+    /// dead SGS is a no-op.
+    pub fn estimator_tick(&mut self, now: Micros, fx: &mut Vec<Effect>) -> Vec<(DagId, SgsReport)> {
+        if !self.sgs.is_alive() {
+            return Vec::new();
+        }
+        let setups = self.sgs.estimator_tick(now, &self.registry);
+        self.emit_setups(&setups, fx);
+        let mut reports = Vec::new();
+        for dag_id in self.sgs.estimator.tracked() {
+            let dag = self.registry.get(dag_id);
+            let report = SgsReport {
+                sgs: self.sgs.id,
+                sandboxes: self.sgs.dag_sandbox_count(dag),
+                qdelay_us: self.sgs.estimator.qdelay(dag_id).unwrap_or(0.0),
+                window_full: self.sgs.estimator.qdelay_window_full(dag_id),
+            };
+            reports.push((dag_id, report));
+        }
+        reports
+    }
+
+    fn emit_setups(&self, setups: &[crate::sgs::SetupStart], fx: &mut Vec<Effect>) {
+        for su in setups {
+            let epoch = self.sgs.pool.get(su.worker).epoch();
+            fx.push(Effect::SetupStarted {
+                sgs: self.sgs.id,
+                epoch,
+                setup: *su,
+            });
+        }
+    }
+
+    /// LBS scale-out priming on this shard (§5.2.3).
+    pub fn prime(
+        &mut self,
+        now: Micros,
+        dag: DagId,
+        prime_target: u32,
+        expected_rate: f64,
+        fx: &mut Vec<Effect>,
+    ) {
+        let setups = self
+            .sgs
+            .prime_dag(now, dag, prime_target, expected_rate, &self.registry);
+        self.emit_setups(&setups, fx);
+    }
+
+    /// Fully dissociate a drained DAG (post scale-in).
+    pub fn release_dag(&mut self, dag: DagId) {
+        self.sgs.release_dag(dag, &self.registry);
+    }
+
+    pub fn reset_qdelay_window(&mut self, dag: DagId) {
+        self.sgs.estimator.reset_qdelay_window(dag);
+    }
+
+    pub fn fail_worker(&mut self, worker: WorkerId) {
+        self.sgs.fail_worker(worker);
+    }
+
+    pub fn recover_worker(&mut self, worker: WorkerId) {
+        self.sgs.recover_worker(worker);
+    }
+
+    /// Fail-stop this shard's SGS; queue contents are returned for
+    /// re-routing by the caller (§6.1).
+    pub fn fail(&mut self) -> Vec<QueuedFn> {
+        self.sgs.fail()
+    }
+
+    /// Migration support (§6.1): detach one in-flight request so the
+    /// caller can re-home it.
+    fn remove_request(&mut self, req: RequestId) -> Option<RequestState> {
+        self.requests.remove(&req.0)
+    }
+
+    /// Where a migrated request now lives, if this shard forwarded it.
+    fn forwarded(&self, req: RequestId) -> Option<SgsId> {
+        self.moved.get(&req.0).copied()
+    }
+
+    /// Migration support (§6.1): detach every in-flight request.
+    fn drain_requests(&mut self) -> Vec<(u64, RequestState)> {
+        self.requests.drain().collect()
+    }
+
+    /// Record a forwarding address for a migrated request.
+    fn note_moved(&mut self, id: u64, to: SgsId) {
+        self.moved.insert(id, to);
+    }
+
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.sgs.check_invariants()
+    }
+}
+
+/// Single-threaded facade over [`Front`] + [`Shard`]s: the API the
+/// discrete-event driver (and the unit tests) program against. It
+/// resolves cross-shard effects (`Reroute`, `Advance`) inline, splicing
+/// their expansions at the position the pre-shard coordinator pushed
+/// the equivalent effects — so the effect stream, and with it the
+/// golden simulation snapshot, is bit-identical to the unsharded code.
+pub struct Coordinator {
+    pub front: Front,
+    pub shards: Vec<Shard>,
+}
+
+impl Coordinator {
+    /// Build the core over an already-populated DAG registry.
+    pub fn new(cfg: Config, registry: DagRegistry, warmup: Micros, seed: u64) -> Self {
+        cfg.validate().expect("invalid config");
+        let registry = Arc::new(registry);
+        let shards: Vec<Shard> = (0..cfg.cluster.num_sgs)
+            .map(|i| {
+                let sgs = Sgs::new(
+                    SgsId(i as u16),
+                    cfg.cluster.workers_per_sgs,
+                    cfg.cluster.cores_per_worker,
+                    cfg.cluster.proactive_pool_mb,
+                    cfg.sgs.clone(),
+                );
+                Shard::new(sgs, Arc::clone(&registry), warmup)
+            })
+            .collect();
+        let front = Front::new(cfg, registry, seed);
+        Coordinator { front, shards }
+    }
+
+    /// Register every DAG in the registry with the LBS (bootstrap).
+    pub fn register_all_dags(&mut self) {
+        self.front.register_all_dags();
+    }
+
+    pub fn cfg(&self) -> &Config {
+        &self.front.cfg
+    }
+
+    pub fn registry(&self) -> &DagRegistry {
+        &self.front.registry
+    }
+
+    pub fn lbs(&self) -> &Lbs {
+        &self.front.lbs
+    }
+
+    pub fn sgs(&self, id: SgsId) -> &Sgs {
+        &self.shards[id.0 as usize].sgs
+    }
+
+    pub fn sgs_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn total_cold_starts(&self) -> u64 {
+        self.shards.iter().map(|s| s.sgs.cold_starts()).sum()
+    }
+
+    /// Requests currently in flight (across all shards).
+    pub fn inflight(&self) -> usize {
+        self.shards.iter().map(|s| s.inflight()).sum()
+    }
+
+    pub fn request(&self, req: RequestId) -> Option<&RequestState> {
+        self.shards.iter().find_map(|s| s.request(req))
+    }
+
+    /// Merge every shard's metrics into one run-wide view (read path;
+    /// shards record independently).
+    pub fn merged_metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        for s in &self.shards {
+            m.merge(&s.metrics);
+        }
+        m
+    }
+
+    /// Admit a new request: front allocates + routes, the home shard
+    /// gets the request state installed. See [`Front::admit`].
+    pub fn admit(
+        &mut self,
+        now: Micros,
+        dag_id: DagId,
+        exec_times: Vec<Micros>,
+        deadline: Option<Micros>,
+        fx: &mut Vec<Effect>,
+    ) -> RequestId {
+        let (req, sgs, state) = self
+            .front
+            .admit(now, dag_id, exec_times, deadline, fx)
+            .expect("admit: unknown dag");
+        self.shards[sgs.0 as usize].install(req, state);
+        req
+    }
+
+    /// Deliver a routed function to its SGS. See [`Shard::enqueue`].
+    pub fn enqueue(
+        &mut self,
+        now: Micros,
+        sgs: SgsId,
+        queued: QueuedFn,
+        is_root: bool,
+        fx: &mut Vec<Effect>,
+    ) {
+        let base = fx.len();
+        self.shards[sgs.0 as usize].enqueue(now, queued, is_root, fx);
+        self.resolve(now, base, fx);
+    }
+
+    /// A dispatched function finished. See [`Shard::fn_complete`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn fn_complete(
+        &mut self,
+        now: Micros,
+        sgs: SgsId,
+        worker: WorkerId,
+        epoch: u64,
+        req: RequestId,
+        f: FnId,
+        fx: &mut Vec<Effect>,
+    ) {
+        let base = fx.len();
+        self.shards[sgs.0 as usize].fn_complete(now, worker, epoch, req, f, fx);
+        self.resolve(now, base, fx);
+    }
+
+    /// A proactive sandbox setup completed. See [`Shard::setup_done`].
     pub fn setup_done(
         &mut self,
         now: Micros,
@@ -376,60 +730,28 @@ impl Coordinator {
         f: FnId,
         fx: &mut Vec<Effect>,
     ) {
-        let s = &mut self.sgss[sgs.0 as usize];
-        if s.pool.get(worker).epoch() != epoch {
-            return; // worker failed mid-setup; sandbox lost
-        }
-        s.setup_done(worker, f);
-        self.dispatch(now, sgs, fx);
+        self.shards[sgs.0 as usize].setup_done(now, worker, epoch, f, fx);
     }
 
-    /// Periodic estimation at one SGS (§4.3.1): recompute demand,
-    /// reconcile sandbox allocations (emitting `SetupStarted` effects),
-    /// and piggyback per-DAG reports to the LBS (§5.2.1). A dead SGS is
-    /// a no-op.
+    /// Periodic estimation at one SGS (§4.3.1), piggybacking the shard's
+    /// reports to the LBS (§5.2.1).
     pub fn estimator_tick(&mut self, now: Micros, sgs: SgsId, fx: &mut Vec<Effect>) {
-        if !self.sgss[sgs.0 as usize].is_alive() {
-            return;
-        }
-        let setups = {
-            let s = &mut self.sgss[sgs.0 as usize];
-            s.estimator_tick(now, &self.registry)
-        };
-        self.emit_setups(sgs, &setups, fx);
-        let tracked = self.sgss[sgs.0 as usize].estimator.tracked();
-        for dag_id in tracked {
-            let s = &self.sgss[sgs.0 as usize];
-            let dag = self.registry.get(dag_id);
-            let report = SgsReport {
-                sgs,
-                sandboxes: s.dag_sandbox_count(dag),
-                qdelay_us: s.estimator.qdelay(dag_id).unwrap_or(0.0),
-                window_full: s.estimator.qdelay_window_full(dag_id),
-            };
-            self.lbs.update_report(dag_id, report);
-        }
-    }
-
-    fn emit_setups(&mut self, sgs: SgsId, setups: &[crate::sgs::SetupStart], fx: &mut Vec<Effect>) {
-        for su in setups {
-            let epoch = self.sgss[sgs.0 as usize].pool.get(su.worker).epoch();
-            fx.push(Effect::SetupStarted {
-                sgs,
-                epoch,
-                setup: *su,
-            });
+        let reports = self.shards[sgs.0 as usize].estimator_tick(now, fx);
+        for (dag_id, report) in reports {
+            self.front.lbs.update_report(dag_id, report);
         }
     }
 
     /// Periodic LBS scaling evaluation (§5.2, Pseudocode 2): apply the
-    /// scale-out/in/drop actions, emitting `SetupStarted` effects for
-    /// scale-out priming.
+    /// scale-out/in/drop actions to the shards they target. KEEP IN
+    /// SYNC with the realtime ticker's action loop (`ticker_main` in
+    /// `realtime.rs`), which applies the same per-arm semantics under
+    /// per-shard locks.
     pub fn lbs_control(&mut self, now: Micros, fx: &mut Vec<Effect>) {
-        let dag_ids: Vec<DagId> = self.registry.iter().map(|d| d.id).collect();
+        let dag_ids: Vec<DagId> = self.front.registry.iter().map(|d| d.id).collect();
         for dag_id in dag_ids {
-            let slack = self.registry.get(dag_id).slack();
-            let actions = self.lbs.control_tick(dag_id, slack);
+            let slack = self.front.registry.get(dag_id).slack();
+            let actions = self.front.lbs.control_tick(dag_id, slack);
             for action in actions {
                 match action {
                     ScaleAction::Out {
@@ -438,27 +760,21 @@ impl Coordinator {
                         prime_target,
                         expected_rate,
                     } => {
-                        let setups = self.sgss[sgs.0 as usize].prime_dag(
-                            now,
-                            dag,
-                            prime_target,
-                            expected_rate,
-                            &self.registry,
-                        );
-                        self.emit_setups(sgs, &setups, fx);
+                        let shard = &mut self.shards[sgs.0 as usize];
+                        shard.prime(now, dag, prime_target, expected_rate, fx);
                     }
                     ScaleAction::In { .. } => {
                         // Gradual drain: the SGS keeps serving discounted
                         // lottery traffic; its estimator decays demand.
                     }
                     ScaleAction::Drop { dag, sgs } => {
-                        self.sgss[sgs.0 as usize].release_dag(dag, &self.registry);
+                        self.shards[sgs.0 as usize].release_dag(dag);
                     }
                     ScaleAction::ResetWindows { dag } => {
-                        let mut members: Vec<SgsId> = self.lbs.active_sgs(dag).to_vec();
-                        members.extend(self.lbs.removed_sgs(dag));
+                        let mut members: Vec<SgsId> = self.front.lbs.active_sgs(dag).to_vec();
+                        members.extend(self.front.lbs.removed_sgs(dag));
                         for sgs in members {
-                            self.sgss[sgs.0 as usize].estimator.reset_qdelay_window(dag);
+                            self.shards[sgs.0 as usize].reset_qdelay_window(dag);
                         }
                     }
                 }
@@ -467,59 +783,93 @@ impl Coordinator {
     }
 
     /// Fail-stop a worker (§6.1): in-flight completions on it will carry
-    /// a stale epoch and be re-enqueued by [`Self::fn_complete`].
+    /// a stale epoch and be re-enqueued by [`Shard::fn_complete`].
     pub fn fail_worker(&mut self, sgs: SgsId, worker: WorkerId) {
-        self.sgss[sgs.0 as usize].fail_worker(worker);
+        self.shards[sgs.0 as usize].fail_worker(worker);
     }
 
     pub fn recover_worker(&mut self, sgs: SgsId, worker: WorkerId) {
-        self.sgss[sgs.0 as usize].recover_worker(worker);
+        self.shards[sgs.0 as usize].recover_worker(worker);
     }
 
     /// Fail-stop an SGS (§6.1: state recovers from the external store;
     /// queued requests are re-routed through the LBS). Emits `Enqueue`
-    /// effects for the orphaned queue contents.
+    /// effects for the orphaned queue contents and migrates the dead
+    /// shard's request states to their new home shards, leaving
+    /// forwarding addresses for straggler completions.
     pub fn sgs_fail(&mut self, now: Micros, sgs: SgsId, fx: &mut Vec<Effect>) {
-        let orphaned = self.sgss[sgs.0 as usize].fail();
-        self.lbs.remove_sgs(sgs);
+        let s = sgs.0 as usize;
+        let orphaned = self.shards[s].fail();
+        self.front.lbs.remove_sgs(sgs);
+        // Re-route each orphaned queue entry, migrating its request's
+        // state with it — a queued function and its request table entry
+        // must stay co-located (the shard locality invariant; with the
+        // old global request table any live SGS could advance any
+        // request, so the pre-shard code could scatter them).
         for queued in orphaned {
-            let dag = queued.dag;
-            let alt = self.lbs.route(dag);
-            // Requests whose home SGS died move entirely.
-            if let Some(state) = self
-                .requests
-                .values_mut()
-                .find(|r| r.sgs == sgs && r.dag == dag)
-            {
-                state.sgs = alt;
-            }
+            let target = match self.shards[s].forwarded(queued.req) {
+                Some(home) => home, // a sibling entry already moved it
+                None => {
+                    let alt = self.front.lbs.route(queued.dag);
+                    if let Some(mut state) = self.shards[s].remove_request(queued.req) {
+                        state.sgs = alt;
+                        self.shards[s].note_moved(queued.req.0, alt);
+                        self.shards[alt.0 as usize].install(queued.req, state);
+                    }
+                    alt
+                }
+            };
             fx.push(Effect::Enqueue {
-                at: now + self.cfg.lbs.route_overhead,
-                sgs: alt,
+                at: now + self.front.cfg.lbs.route_overhead,
+                sgs: target,
                 queued,
                 is_root: false,
             });
         }
-        // Reassign home SGS for all in-flight requests of the dead SGS.
-        let reassign: Vec<u64> = self
-            .requests
-            .iter()
-            .filter(|(_, r)| r.sgs == sgs)
-            .map(|(id, _)| *id)
-            .collect();
-        for id in reassign {
-            let dag = self.requests[&id].dag;
-            let alt = self.lbs.route(dag);
-            self.requests.get_mut(&id).unwrap().sgs = alt;
+        // Re-home every remaining in-flight request of the dead SGS.
+        for (id, mut state) in self.shards[s].drain_requests() {
+            let alt = self.front.lbs.route(state.dag);
+            state.sgs = alt;
+            self.shards[s].note_moved(id, alt);
+            self.shards[alt.0 as usize].install(RequestId(id), state);
         }
     }
 
     /// Whole-platform structural invariants (driven by property tests).
     pub fn check_invariants(&self) -> Result<(), String> {
-        for s in &self.sgss {
+        for s in &self.shards {
             s.check_invariants()?;
         }
         Ok(())
+    }
+
+    /// Expand cross-shard effects (`Reroute`, `Advance`) in place,
+    /// starting at index `base`. The expansion is spliced at the
+    /// position of the effect it replaces — exactly where the unsharded
+    /// coordinator pushed the equivalent `Enqueue`/`RequestDone`
+    /// effects, preserving the discrete-event push order bit-for-bit.
+    fn resolve(&mut self, now: Micros, base: usize, fx: &mut Vec<Effect>) {
+        let mut i = base;
+        while i < fx.len() {
+            if !matches!(fx[i], Effect::Reroute { .. } | Effect::Advance { .. }) {
+                i += 1;
+                continue;
+            }
+            let mut sub = Vec::new();
+            match fx.remove(i) {
+                Effect::Reroute {
+                    from,
+                    queued,
+                    is_root,
+                } => self.front.reroute(now, from, queued, is_root, &mut sub),
+                Effect::Advance { sgs, req, f, lost } => {
+                    self.shards[sgs.0 as usize].advance(now, req, f, lost, &mut sub);
+                }
+                _ => unreachable!("matched above"),
+            }
+            // Re-examine from `i`: the expansion may forward again.
+            fx.splice(i..i, sub);
+        }
     }
 }
 
@@ -611,7 +961,7 @@ mod tests {
         let done = effects.iter().any(|e| matches!(e, Effect::RequestDone { req: r, .. } if *r == req));
         assert!(done, "expected RequestDone, got {effects:?}");
         assert_eq!(core.inflight(), 0);
-        assert_eq!(core.metrics.total.completed, 1);
+        assert_eq!(core.merged_metrics().total.completed, 1);
         core.check_invariants().unwrap();
     }
 
@@ -684,5 +1034,82 @@ mod tests {
             }
         }
         assert_eq!(reroutes, queued_before);
+    }
+
+    #[test]
+    fn sgs_failure_migrates_request_state_and_straggler_completions_follow() {
+        let mut registry = DagRegistry::new();
+        registry.register(DagSpec::chain(
+            DagId(0),
+            "chain",
+            &[(20 * MS, 150 * MS, 128), (30 * MS, 150 * MS, 128)],
+            1_000 * MS,
+        ));
+        let mut core = Coordinator::new(cfg(2, 1, 1), registry, 0, 7);
+        core.register_all_dags();
+        let mut fx = Vec::new();
+        let req = core.admit(0, DagId(0), vec![20 * MS, 30 * MS], None, &mut fx);
+        let effects = settle(&mut core, 0, &mut fx);
+        let (home, epoch, d0) = match &effects[..] {
+            [Effect::Dispatched {
+                sgs,
+                epoch,
+                dispatch,
+            }] => (*sgs, *epoch, dispatch.clone()),
+            other => panic!("{other:?}"),
+        };
+        // the home SGS dies while fn 0 is running on its worker
+        core.sgs_fail(10, home, &mut fx);
+        assert!(fx.is_empty(), "no queued work to re-route");
+        let new_home = core.request(req).expect("migrated, not lost").sgs;
+        assert_ne!(new_home, home, "state re-homed to a live SGS");
+        // the in-flight completion arrives at the dead shard and must
+        // chase the migrated state: fn 1 dispatches at the new home
+        core.fn_complete(d0.finish_at, home, d0.worker, epoch, req, d0.f, &mut fx);
+        let effects = settle(&mut core, d0.finish_at, &mut fx);
+        let (sgs1, d1) = effects
+            .iter()
+            .find_map(|e| match e {
+                Effect::Dispatched { sgs, dispatch, .. } => Some((*sgs, dispatch.clone())),
+                _ => None,
+            })
+            .expect("child dispatched after migration");
+        assert_eq!(sgs1, new_home, "downstream runs at the new home SGS");
+        assert_eq!(d1.f.idx, 1);
+        core.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn merged_metrics_aggregate_across_shards() {
+        let mut registry = DagRegistry::new();
+        registry.register(DagSpec::single(DagId(0), "a", 10 * MS, 50 * MS, 128, 100 * MS));
+        registry.register(DagSpec::single(DagId(1), "b", 10 * MS, 50 * MS, 128, 100 * MS));
+        let mut core = Coordinator::new(cfg(2, 1, 2), registry, 0, 7);
+        core.register_all_dags();
+        let mut fx = Vec::new();
+        for (i, dag) in [DagId(0), DagId(1), DagId(0), DagId(1)].into_iter().enumerate() {
+            let t0 = i as u64 * 200 * MS;
+            let req = core.admit(t0, dag, vec![10 * MS], None, &mut fx);
+            let effects = settle(&mut core, t0, &mut fx);
+            let (sgs, epoch, d) = effects
+                .iter()
+                .find_map(|e| match e {
+                    Effect::Dispatched {
+                        sgs,
+                        epoch,
+                        dispatch,
+                    } => Some((*sgs, *epoch, dispatch.clone())),
+                    _ => None,
+                })
+                .expect("dispatched");
+            core.fn_complete(d.finish_at, sgs, d.worker, epoch, req, d.f, &mut fx);
+            settle(&mut core, d.finish_at, &mut fx);
+        }
+        let merged = core.merged_metrics();
+        assert_eq!(merged.total.completed, 4);
+        let per_shard: u64 = core.shards.iter().map(|s| s.metrics.total.completed).sum();
+        assert_eq!(per_shard, 4, "every completion recorded on exactly one shard");
+        assert_eq!(merged.dag(DagId(0)).unwrap().completed, 2);
+        assert_eq!(merged.dag(DagId(1)).unwrap().completed, 2);
     }
 }

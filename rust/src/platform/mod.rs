@@ -8,12 +8,16 @@
 //! the background, each SGS runs its estimation loop (§4.3.1) and the
 //! LBS runs its per-DAG scaling loop (Pseudocode 2).
 //!
-//! All of that lives in the driver-agnostic [`coordinator`] core. This
-//! module's [`SimPlatform`] is the discrete-event driver: it owns the
-//! virtual clock and translates the core's [`coordinator::Effect`]s into
-//! calendar events. The wall-clock driver ([`realtime`]) turns the same
-//! effects into thread-pool work — both modes exercise the identical
-//! scheduling code (DESIGN.md §Coordinator).
+//! All of that lives in the driver-agnostic [`coordinator`] core,
+//! sharded per SGS (DESIGN.md §Sharding). This module's [`SimPlatform`]
+//! is the discrete-event driver: it owns the virtual clock, programs
+//! against the single-threaded [`Coordinator`] facade (which visits
+//! shards in a fixed order), and translates the core's
+//! [`coordinator::Effect`]s into calendar events — applied in the
+//! pre-shard push order, so simulation results are bit-identical across
+//! the sharding refactor. The wall-clock driver ([`realtime`]) turns
+//! the same effects into thread-pool work under one lock per shard —
+//! both modes exercise the identical scheduling code.
 
 pub mod coordinator;
 pub mod realtime;
@@ -111,6 +115,9 @@ pub struct SimPlatform {
     /// Reused effect buffer (hot path, avoids per-event allocation).
     fx: Vec<Effect>,
     started: bool,
+    /// Per-shard metrics merged at the end of [`Self::run`] (read path
+    /// for the figure harnesses).
+    merged_metrics: Metrics,
 }
 
 impl SimPlatform {
@@ -132,6 +139,7 @@ impl SimPlatform {
             series: HashMap::new(),
             fx: Vec::new(),
             started: false,
+            merged_metrics: Metrics::new(),
         }
     }
 
@@ -145,19 +153,21 @@ impl SimPlatform {
     }
 
     pub fn cfg(&self) -> &Config {
-        &self.core.cfg
+        self.core.cfg()
     }
 
     pub fn registry(&self) -> &DagRegistry {
-        &self.core.registry
+        self.core.registry()
     }
 
+    /// Run-wide metrics: the per-shard collectors merged at the end of
+    /// [`Self::run`] (empty before the first run).
     pub fn metrics(&self) -> &Metrics {
-        &self.core.metrics
+        &self.merged_metrics
     }
 
     pub fn lbs(&self) -> &Lbs {
-        &self.core.lbs
+        self.core.lbs()
     }
 
     pub fn sgs(&self, id: SgsId) -> &Sgs {
@@ -206,13 +216,13 @@ impl SimPlatform {
             self.events.push_at(first, Event::Arrival { app_idx: idx });
         }
         // Periodic loops.
-        let est = self.core.cfg.sgs.estimate_interval;
+        let est = self.core.cfg().sgs.estimate_interval;
         for s in 0..self.core.sgs_count() {
             self.events
                 .push_at(est, Event::EstimatorTick { sgs: SgsId(s as u16) });
         }
         self.events
-            .push_at(self.core.cfg.lbs.control_interval, Event::LbsControlTick);
+            .push_at(self.core.cfg().lbs.control_interval, Event::LbsControlTick);
     }
 
     /// Run the simulation to the horizon and return the metrics summary.
@@ -226,7 +236,8 @@ impl SimPlatform {
             platform.handle(q, ev);
         });
         self.events = queue;
-        self.core.metrics.summary_row()
+        self.merged_metrics = self.core.merged_metrics();
+        self.merged_metrics.summary_row()
     }
 
     // ------------------------------------------------------------------
@@ -274,7 +285,7 @@ impl SimPlatform {
                 Self::apply(q, &mut fx);
                 self.record_sgs_series(now, sgs);
                 q.push_after(
-                    self.core.cfg.sgs.estimate_interval,
+                    self.core.cfg().sgs.estimate_interval,
                     Event::EstimatorTick { sgs },
                 );
             }
@@ -282,7 +293,7 @@ impl SimPlatform {
                 self.core.lbs_control(now, &mut fx);
                 Self::apply(q, &mut fx);
                 self.record_lbs_series(now);
-                q.push_after(self.core.cfg.lbs.control_interval, Event::LbsControlTick);
+                q.push_after(self.core.cfg().lbs.control_interval, Event::LbsControlTick);
             }
             Event::WorkerFail { sgs, worker } => self.core.fail_worker(sgs, worker),
             Event::WorkerRecover { sgs, worker } => self.core.recover_worker(sgs, worker),
@@ -338,6 +349,12 @@ impl SimPlatform {
                 // Metrics were recorded by the core; virtual time has no
                 // caller waiting on a reply.
                 Effect::RequestDone { .. } => {}
+                // Cross-shard control effects never escape the facade:
+                // `Coordinator` resolves them inline (in pre-shard push
+                // order) before returning to the driver.
+                Effect::Reroute { .. } | Effect::Advance { .. } => {
+                    unreachable!("cross-shard effects are resolved by the Coordinator facade")
+                }
             }
         }
     }
@@ -349,7 +366,7 @@ impl SimPlatform {
         let noise = self.opts.exec_noise_frac;
         let exec_times: Vec<Micros> = self
             .core
-            .registry
+            .registry()
             .get(dag_id)
             .functions
             .iter()
@@ -380,7 +397,7 @@ impl SimPlatform {
         let s = self.core.sgs(sgs);
         if s.is_alive() {
             for dag_id in s.estimator.tracked() {
-                let dag = self.core.registry.get(dag_id);
+                let dag = self.core.registry().get(dag_id);
                 let sandboxes = s.dag_sandbox_count(dag);
                 self.series
                     .entry(format!("sandboxes.dag{}.sgs{}", dag_id.0, sgs.0))
@@ -424,11 +441,11 @@ impl SimPlatform {
         if !self.opts.record_series {
             return;
         }
-        for dag in self.core.registry.iter() {
+        for dag in self.core.registry().iter() {
             self.series
                 .entry(format!("active_sgs.dag{}", dag.id.0))
                 .or_default()
-                .push((now, self.core.lbs.active_sgs(dag.id).len() as f64));
+                .push((now, self.core.lbs().active_sgs(dag.id).len() as f64));
         }
     }
 
@@ -619,6 +636,22 @@ mod tests {
         };
         assert_eq!(run(1), run(1));
         assert_ne!(run(1), run(2));
+    }
+
+    #[test]
+    fn merged_metrics_match_run_summary() {
+        // Per-shard metrics merged on read must reproduce the run's own
+        // summary row field-for-field.
+        let mut p = SimPlatform::new(small_cfg(2, 2, 4), one_app(100.0), opts(10));
+        let row = p.run();
+        assert_eq!(p.metrics().summary_row(), row);
+        let per_shard: u64 = p
+            .core()
+            .shards
+            .iter()
+            .map(|s| s.metrics.total.completed)
+            .sum();
+        assert_eq!(per_shard, row.completed, "each completion lands on one shard");
     }
 
     #[test]

@@ -1,16 +1,28 @@
-//! Real-time serving mode: the wall-clock driver for the shared
-//! [`Coordinator`](super::coordinator::Coordinator) core.
+//! Real-time serving mode: the wall-clock driver for the sharded
+//! coordinator core ([`super::coordinator`]).
 //!
 //! This is the twin of the simulated platform and — since the
 //! coordinator extraction — literally the same code path: requests are
-//! admitted into the same request table, routed by the same LBS,
+//! admitted into the same request tables, routed by the same LBS,
 //! ordered by the same SRSF heap ([`crate::sgs::SchedQueue`]), and
 //! placed warm-sandbox-aware by the same dispatch loop. Where the
 //! discrete-event driver maps a `Dispatched` effect to a future
 //! `FnComplete` event, this driver hands it to a worker thread whose
-//! [`WorkerExecutor`] performs the actual computation; the completion
-//! call-back is wall-clock time doing what virtual time does in the
-//! simulator.
+//! [`WorkerExecutor`](crate::runtime::WorkerExecutor) performs the
+//! actual computation; the completion call-back is wall-clock time doing
+//! what virtual time does in the simulator.
+//!
+//! Concurrency (DESIGN.md §Sharding): there is no global lock. Each
+//! coordinator [`Shard`] — one SGS, its request states, its metrics,
+//! its worker job queues — sits behind its own mutex, and the routing
+//! [`Front`] (LBS + request-id allocation) behind a separate
+//! short-critical-section lock. Admits to different SGSs, completions,
+//! and estimator ticks on different shards run fully in parallel; the
+//! paper's "each SGS schedules its worker pool independently" (§5)
+//! becomes "each shard lock is independent". No thread ever holds two
+//! of these locks at once, so there is no lock-order hazard: cross-
+//! shard work travels as [`Effect`] values applied after the local
+//! lock is released.
 //!
 //! A *cold start* is real work — with the PJRT backend the worker
 //! thread parses the artifact's HLO text and compiles it on its own
@@ -27,6 +39,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -34,13 +47,13 @@ use std::time::{Duration, Instant};
 
 use crate::config::{Config, Micros, SchedPolicy};
 use crate::dag::{DagId, DagRegistry, DagSpec, FnId};
-use crate::metrics::{RequestOutcome, SummaryRow};
+use crate::metrics::{Metrics, RequestOutcome, SummaryRow};
 use crate::runtime::{ExecutorFactory, Manifest, RuntimeError, Tensor, XlaExecutorFactory};
 use crate::sgs::{RequestId, SgsId};
 use crate::util::fasthash::FastMap;
 use crate::worker::WorkerId;
 
-use super::coordinator::{Coordinator, Effect};
+use super::coordinator::{Coordinator, Effect, Front, Shard};
 
 /// Nominal per-function estimates for artifact-derived single-function
 /// DAGs (drive SRSF tie-breaks and the estimator's provisioning; the
@@ -55,7 +68,7 @@ pub struct FnCompletion {
     pub artifact: String,
     /// Function index within the request's DAG.
     pub fn_idx: u16,
-    /// Worker thread that ran it.
+    /// Worker thread that ran it (global thread index across shards).
     pub worker: usize,
     pub cold: bool,
     /// SGS queuing delay before dispatch.
@@ -100,8 +113,12 @@ pub struct Completion {
 /// Knobs for the real-time platform.
 #[derive(Debug, Clone)]
 pub struct RtOptions {
-    /// Worker threads (one core each: a thread runs one function at a
-    /// time, exactly like a simulated single-core worker).
+    /// Coordinator shards (SGSs). Each gets its own worker threads, its
+    /// own lock, and an independent scheduling loop; the LBS spreads
+    /// DAGs across them.
+    pub num_sgs: usize,
+    /// Worker threads per SGS (one core each: a thread runs one
+    /// function at a time, exactly like a simulated single-core worker).
     pub workers: usize,
     pub policy: SchedPolicy,
     /// Run the §4.3.1 estimator and §5.2 LBS control loops on a
@@ -115,6 +132,7 @@ pub struct RtOptions {
 impl Default for RtOptions {
     fn default() -> Self {
         RtOptions {
+            num_sgs: 1,
             workers: 2,
             policy: SchedPolicy::Srsf,
             background_ticks: true,
@@ -129,8 +147,8 @@ enum Reply {
     Dag(Sender<DagCompletion>),
 }
 
-/// Per-request reply bookkeeping (the driver-side shadow of the
-/// coordinator's request table).
+/// Per-request reply bookkeeping (the driver-side shadow of a shard's
+/// request table; lives on the request's home shard).
 struct Pending {
     reply: Reply,
     input: Arc<Vec<f32>>,
@@ -138,10 +156,10 @@ struct Pending {
     failed: bool,
 }
 
-/// Work handed to a worker thread.
+/// Work handed to a worker thread. `worker` is the pool-local id within
+/// the thread's own shard.
 enum Job {
     Run {
-        sgs: SgsId,
         worker: WorkerId,
         epoch: u64,
         req: RequestId,
@@ -152,7 +170,6 @@ enum Job {
         input: Arc<Vec<f32>>,
     },
     Setup {
-        sgs: SgsId,
         worker: WorkerId,
         epoch: u64,
         f: FnId,
@@ -177,23 +194,45 @@ impl WorkerQueue {
     }
 }
 
-struct RtState {
-    core: Coordinator,
-    /// Per worker-thread job queues (indexed by thread).
+/// Everything one shard's lock protects: the coordinator shard plus the
+/// driver-side job queues and reply table for requests homed there.
+struct ShardRt {
+    shard: Shard,
+    /// Per worker-thread job queues (indexed by pool-local worker id).
     jobs: Vec<WorkerQueue>,
     pending: FastMap<u64, Pending>,
-    prewarm_outstanding: usize,
-    prewarm_error: Option<String>,
     shutdown: bool,
 }
 
-struct Shared {
-    state: Mutex<RtState>,
+/// A shard and the condvar its worker threads sleep on.
+struct ShardCell {
+    state: Mutex<ShardRt>,
     cv: Condvar,
+}
+
+/// Prewarm barrier bookkeeping (start-up only).
+#[derive(Default)]
+struct PrewarmState {
+    outstanding: usize,
+    error: Option<String>,
+}
+
+struct Shared {
+    /// Routing front-end: LBS + request-id allocation. Short critical
+    /// sections only (a lottery draw + root enqueue construction).
+    front: Mutex<Front>,
+    /// Immutable after start; readable by every thread without a lock.
+    registry: Arc<DagRegistry>,
+    cfg: Config,
+    shards: Vec<ShardCell>,
+    prewarm: Mutex<PrewarmState>,
+    prewarm_cv: Condvar,
     start: Instant,
     workers_per_sgs: usize,
     /// artifact name → its single-function DAG (for [`Server::submit`]).
     singles: HashMap<String, DagId>,
+    /// Ticker-thread stop flag (worker threads use the per-shard flag).
+    shutdown: AtomicBool,
 }
 
 impl Shared {
@@ -203,20 +242,27 @@ impl Shared {
     }
 }
 
-fn thread_index(sgs: SgsId, worker: WorkerId, workers_per_sgs: usize) -> usize {
-    sgs.0 as usize * workers_per_sgs + worker.0 as usize
-}
-
 fn fn_name(registry: &DagRegistry, f: FnId) -> String {
     registry.get(f.dag).functions[f.idx as usize].name.clone()
 }
 
-/// Turn coordinator effects into wall-clock actions: `Enqueue` feeds
-/// straight back into the core (routing overhead is real lock time, not
-/// simulated), `Dispatched`/`SetupStarted` become worker jobs, and
-/// `RequestDone` resolves the caller's reply channel. Newly generated
-/// effects are processed until quiescent.
-fn drain_effects(state: &mut RtState, now: Micros, fx: &mut Vec<Effect>, workers_per_sgs: usize) {
+/// Turn coordinator effects into wall-clock actions *for one locked
+/// shard*: `Enqueue`/`Advance` for this shard feed straight back into
+/// it (routing overhead is real lock time, not simulated),
+/// `Dispatched`/`SetupStarted` become worker jobs, and `RequestDone`
+/// resolves the caller's reply channel. Newly generated effects are
+/// processed until quiescent; effects that target another shard (or the
+/// front, for §6.1 re-routing) are returned for the caller to apply
+/// *after* releasing this shard's lock — no thread ever holds two shard
+/// locks.
+fn drain_local(
+    sh: &mut ShardRt,
+    now: Micros,
+    fx: &mut Vec<Effect>,
+    registry: &DagRegistry,
+) -> Vec<Effect> {
+    let my = sh.shard.id();
+    let mut remote = Vec::new();
     while !fx.is_empty() {
         let batch: Vec<Effect> = std::mem::take(fx);
         for e in batch {
@@ -226,21 +272,22 @@ fn drain_effects(state: &mut RtState, now: Micros, fx: &mut Vec<Effect>, workers
                     queued,
                     is_root,
                     ..
-                } => state.core.enqueue(now, sgs, queued, is_root, fx),
+                } if sgs == my => sh.shard.enqueue(now, queued, is_root, fx),
+                Effect::Advance { sgs, req, f, lost } if sgs == my => {
+                    sh.shard.advance(now, req, f, lost, fx)
+                }
                 Effect::Dispatched {
                     sgs,
                     epoch,
                     dispatch: d,
-                } => {
-                    let artifact = fn_name(&state.core.registry, d.f);
-                    let input = state
+                } if sgs == my => {
+                    let artifact = fn_name(registry, d.f);
+                    let input = sh
                         .pending
                         .get(&d.req.0)
                         .map(|p| Arc::clone(&p.input))
                         .unwrap_or_default();
-                    let t = thread_index(sgs, d.worker, workers_per_sgs);
-                    state.jobs[t].runs.push_back(Job::Run {
-                        sgs,
+                    sh.jobs[d.worker.0 as usize].runs.push_back(Job::Run {
                         worker: d.worker,
                         epoch,
                         req: d.req,
@@ -251,27 +298,89 @@ fn drain_effects(state: &mut RtState, now: Micros, fx: &mut Vec<Effect>, workers
                         input,
                     });
                 }
-                Effect::SetupStarted { sgs, epoch, setup } => {
-                    let artifact = fn_name(&state.core.registry, setup.f);
-                    let t = thread_index(sgs, setup.worker, workers_per_sgs);
-                    state.jobs[t].setups.push_back(Job::Setup {
-                        sgs,
-                        worker: setup.worker,
-                        epoch,
-                        f: setup.f,
-                        artifact,
-                        prewarm: false,
-                    });
+                Effect::SetupStarted { sgs, epoch, setup } if sgs == my => {
+                    let artifact = fn_name(registry, setup.f);
+                    sh.jobs[setup.worker.0 as usize]
+                        .setups
+                        .push_back(Job::Setup {
+                            worker: setup.worker,
+                            epoch,
+                            f: setup.f,
+                            artifact,
+                            prewarm: false,
+                        });
                 }
-                Effect::RequestDone { req, outcome } => finalize(state, req, outcome),
+                Effect::RequestDone { req, outcome } => finalize(sh, req, outcome),
+                other => remote.push(other),
             }
+        }
+    }
+    remote
+}
+
+/// Lock shard `sgs`, apply `fx` there, notify its workers, and return
+/// whatever escaped to other shards.
+fn apply_on_shard(shared: &Shared, sgs: SgsId, now: Micros, mut fx: Vec<Effect>) -> Vec<Effect> {
+    let cell = &shared.shards[sgs.0 as usize];
+    let mut st = cell.state.lock().unwrap();
+    let remote = drain_local(&mut st, now, &mut fx, &shared.registry);
+    drop(st);
+    cell.cv.notify_all();
+    remote
+}
+
+/// Apply cross-shard effects, one lock at a time, until quiescent.
+/// `Reroute` goes through the front (a fresh LBS decision, §6.1); the
+/// rest are handed to their target shard.
+fn apply_remote(shared: &Shared, now: Micros, fx: Vec<Effect>) {
+    let mut queue: VecDeque<Effect> = fx.into();
+    while let Some(e) = queue.pop_front() {
+        let expanded = match e {
+            Effect::Reroute {
+                from,
+                queued,
+                is_root,
+            } => {
+                let mut sub = Vec::new();
+                shared
+                    .front
+                    .lock()
+                    .unwrap()
+                    .reroute(now, from, queued, is_root, &mut sub);
+                sub
+            }
+            Effect::Enqueue { sgs, .. }
+            | Effect::Dispatched { sgs, .. }
+            | Effect::SetupStarted { sgs, .. }
+            | Effect::Advance { sgs, .. } => apply_on_shard(shared, sgs, now, vec![e]),
+            // A request's RequestDone is emitted under its home shard's
+            // lock and resolved there by drain_local, because Pending
+            // (reply channel + input) lives on the home shard and does
+            // NOT migrate. That is sound today: the realtime server
+            // exposes no SGS failure injection, so Reroute/Advance and a
+            // deferred RequestDone are unreachable (handled defensively
+            // above). If realtime shard failure is ever added, Pending
+            // must move together with Shard::install or replies leak —
+            // the assert below turns that silent hang into a loud one.
+            Effect::RequestDone { .. } => {
+                debug_assert!(
+                    false,
+                    "RequestDone escaped its home shard: Pending does not migrate; \
+                     the caller's reply channel would hang"
+                );
+                Vec::new()
+            }
+        };
+        // Preserve emission order: expansions go to the queue front.
+        for sub in expanded.into_iter().rev() {
+            queue.push_front(sub);
         }
     }
 }
 
 /// Resolve a finished request's reply channel.
-fn finalize(state: &mut RtState, req: RequestId, outcome: RequestOutcome) {
-    let Some(p) = state.pending.remove(&req.0) else {
+fn finalize(sh: &mut ShardRt, req: RequestId, outcome: RequestOutcome) {
+    let Some(p) = sh.pending.remove(&req.0) else {
         return;
     };
     if p.failed {
@@ -306,8 +415,8 @@ fn finalize(state: &mut RtState, req: RequestId, outcome: RequestOutcome) {
     }
 }
 
-/// The real-time server: worker threads + optional control-loop ticker
-/// around the shared coordinator core.
+/// The real-time server: per-shard worker threads + optional
+/// control-loop ticker around the sharded coordinator core.
 pub struct Server {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
@@ -367,6 +476,7 @@ impl Server {
         prewarm: &[&str],
         manifest: Manifest,
     ) -> Result<Server, RuntimeError> {
+        assert!(opts.num_sgs > 0, "need at least one SGS shard");
         assert!(opts.workers > 0, "need at least one worker thread");
         let mut registry = DagRegistry::new();
         for dag in dags {
@@ -379,11 +489,11 @@ impl Server {
             }
         }
 
-        // One SGS whose workers are this process's threads, one core
-        // each: a thread runs one function at a time, exactly like a
-        // simulated single-core worker.
+        // N SGS shards whose workers are this process's threads, one
+        // core each: a thread runs one function at a time, exactly like
+        // a simulated single-core worker.
         let mut cfg = Config::default();
-        cfg.cluster.num_sgs = 1;
+        cfg.cluster.num_sgs = opts.num_sgs;
         cfg.cluster.workers_per_sgs = opts.workers;
         cfg.cluster.cores_per_worker = 1;
         cfg.cluster.worker_mem_mb = cfg.cluster.worker_mem_mb.max(opts.pool_mb);
@@ -393,23 +503,35 @@ impl Server {
         cfg.sgs.sched_overhead = 0;
         cfg.lbs.route_overhead = 0;
 
-        let mut core = Coordinator::new(cfg, registry, 0, 0x5eed);
+        let mut core = Coordinator::new(cfg.clone(), registry, 0, 0x5eed);
         core.register_all_dags();
+        let Coordinator { front, shards } = core;
+        let registry = Arc::clone(&front.registry);
         let workers_per_sgs = opts.workers;
-        let thread_count = core.sgs_count() * workers_per_sgs;
+        let thread_count = shards.len() * workers_per_sgs;
+        let shard_cells: Vec<ShardCell> = shards
+            .into_iter()
+            .map(|shard| ShardCell {
+                state: Mutex::new(ShardRt {
+                    shard,
+                    jobs: (0..workers_per_sgs).map(|_| WorkerQueue::default()).collect(),
+                    pending: FastMap::default(),
+                    shutdown: false,
+                }),
+                cv: Condvar::new(),
+            })
+            .collect();
         let shared = Arc::new(Shared {
-            state: Mutex::new(RtState {
-                core,
-                jobs: (0..thread_count).map(|_| WorkerQueue::default()).collect(),
-                pending: FastMap::default(),
-                prewarm_outstanding: 0,
-                prewarm_error: None,
-                shutdown: false,
-            }),
-            cv: Condvar::new(),
+            front: Mutex::new(front),
+            registry,
+            cfg,
+            shards: shard_cells,
+            prewarm: Mutex::new(PrewarmState::default()),
+            prewarm_cv: Condvar::new(),
             start: Instant::now(),
             workers_per_sgs,
             singles,
+            shutdown: AtomicBool::new(false),
         });
 
         // Spawn the worker threads; each builds its own executor.
@@ -432,72 +554,63 @@ impl Server {
         }
 
         // Prewarm: proactively set up the named functions on every
-        // worker and wait until the compiles finish (the server accepts
-        // no jobs before returning, so this is a clean barrier).
-        {
-            let mut st = shared.state.lock().unwrap();
+        // worker of every shard and wait until the compiles finish (the
+        // server accepts no jobs before returning, so this is a clean
+        // barrier). The outstanding count is published *before* any job
+        // is queued — a worker may pop one the moment its shard's lock
+        // is released.
+        if !prewarm.is_empty() {
+            shared.prewarm.lock().unwrap().outstanding = prewarm.len() * thread_count;
             for name in prewarm {
-                let found = st.core.registry.iter().find_map(|d| {
+                let found = shared.registry.iter().find_map(|d| {
                     d.functions
                         .iter()
                         .position(|f| f.name == *name)
                         .map(|i| (d.fn_id(i as u16), d.functions[i].mem_mb))
                 });
                 let Some((f, mem_mb)) = found else {
+                    shutdown_workers(&shared, handles);
                     return Err(RuntimeError::UnknownArtifact(name.to_string()));
                 };
-                for s in 0..st.core.sgs_count() {
+                for cell in &shared.shards {
+                    let mut st = cell.state.lock().unwrap();
                     for w in 0..workers_per_sgs {
-                        let sgs = SgsId(s as u16);
                         let worker = WorkerId(w as u16);
                         // Prewarm promises the artifact warm on *every*
                         // worker before the server accepts jobs — fail
                         // start loudly rather than silently skip one.
-                        if st.core.sgss[s]
-                            .pool
-                            .get_mut(worker)
+                        if st.shard.sgs.pool.get_mut(worker)
                             .sandboxes
                             .begin_setup(f, mem_mb)
                             .is_err()
                         {
-                            st.shutdown = true;
                             drop(st);
-                            shared.cv.notify_all();
-                            for h in handles {
-                                let _ = h.join();
-                            }
+                            shutdown_workers(&shared, handles);
                             return Err(RuntimeError::Xla(format!(
                                 "prewarm {name}: no sandbox capacity for {mem_mb} MB \
                                  on worker {w} (pool {} MB)",
                                 opts.pool_mb
                             )));
                         }
-                        let artifact = (*name).to_string();
-                        st.prewarm_outstanding += 1;
-                        st.jobs[thread_index(sgs, worker, workers_per_sgs)]
-                            .setups
-                            .push_back(Job::Setup {
-                                sgs,
-                                worker,
-                                epoch: 0,
-                                f,
-                                artifact,
-                                prewarm: true,
-                            });
+                        st.jobs[w].setups.push_back(Job::Setup {
+                            worker,
+                            epoch: 0,
+                            f,
+                            artifact: (*name).to_string(),
+                            prewarm: true,
+                        });
                     }
+                    drop(st);
+                    cell.cv.notify_all();
                 }
             }
-            shared.cv.notify_all();
-            while st.prewarm_outstanding > 0 {
-                st = shared.cv.wait(st).unwrap();
+            let mut pw = shared.prewarm.lock().unwrap();
+            while pw.outstanding > 0 {
+                pw = shared.prewarm_cv.wait(pw).unwrap();
             }
-            if let Some(e) = st.prewarm_error.take() {
-                st.shutdown = true;
-                drop(st);
-                shared.cv.notify_all();
-                for h in handles {
-                    let _ = h.join();
-                }
+            if let Some(e) = pw.error.take() {
+                drop(pw);
+                shutdown_workers(&shared, handles);
                 return Err(RuntimeError::Xla(e));
             }
         }
@@ -530,7 +643,8 @@ impl Server {
     /// Submit a full DAG request with a per-request deadline: every
     /// function executes (dependency-ordered, warm-sandbox-aware) on the
     /// worker pool, and the aggregate completion arrives on the returned
-    /// receiver.
+    /// receiver. An unregistered `dag` drops the channel (the caller
+    /// observes `recv() == Err`) instead of panicking the server.
     pub fn submit_dag(
         &self,
         dag: DagId,
@@ -542,25 +656,39 @@ impl Server {
         rx
     }
 
-    /// Look up a registered DAG by name.
+    /// Look up a registered DAG by name (lock-free: the registry is
+    /// immutable after start).
     pub fn dag_id(&self, name: &str) -> Option<DagId> {
-        let st = self.shared.state.lock().unwrap();
-        st.core.registry.iter().find(|d| d.name == name).map(|d| d.id)
+        self.shared
+            .registry
+            .iter()
+            .find(|d| d.name == name)
+            .map(|d| d.id)
     }
 
     fn admit(&self, dag: DagId, input: Vec<f32>, deadline_us: u64, reply: Reply) {
         let now = self.shared.now();
+        // Validate against the immutable registry before touching any
+        // lock; an unknown DAG just drops `reply` (closed channel).
+        let Some(spec) = self.shared.registry.try_get(dag) else {
+            return;
+        };
+        let exec_times: Vec<Micros> = spec.functions.iter().map(|f| f.exec_time).collect();
         let mut fx = Vec::new();
-        let mut st = self.shared.state.lock().unwrap();
-        let exec_times: Vec<Micros> = st
-            .core
-            .registry
-            .get(dag)
-            .functions
-            .iter()
-            .map(|f| f.exec_time)
-            .collect();
-        let req = st.core.admit(now, dag, exec_times, Some(deadline_us), &mut fx);
+        // Short front critical section: one LBS draw + root construction.
+        let admitted = {
+            let mut front = self.shared.front.lock().unwrap();
+            front.admit(now, dag, exec_times, Some(deadline_us), &mut fx)
+        };
+        let Some((req, sgs, state)) = admitted else {
+            return;
+        };
+        // Home-shard critical section: install state, enqueue roots,
+        // drain the dispatch loop. Other shards stay untouched — admits
+        // to different SGSs run fully in parallel.
+        let cell = &self.shared.shards[sgs.0 as usize];
+        let mut st = cell.state.lock().unwrap();
+        st.shard.install(req, state);
         st.pending.insert(
             req.0,
             Pending {
@@ -570,52 +698,63 @@ impl Server {
                 failed: false,
             },
         );
-        drain_effects(&mut st, now, &mut fx, self.shared.workers_per_sgs);
+        let remote = drain_local(&mut st, now, &mut fx, &self.shared.registry);
         drop(st);
-        self.shared.cv.notify_all();
+        cell.cv.notify_all();
+        apply_remote(&self.shared, now, remote);
     }
 
-    /// Warm sandbox kinds per worker thread (observability).
+    /// Warm sandbox kinds per worker thread (observability), indexed by
+    /// global thread id (shard-major).
     pub fn warm_counts(&self) -> Vec<usize> {
-        let st = self.shared.state.lock().unwrap();
-        let mut out = vec![0usize; st.jobs.len()];
-        for (s, sgs) in st.core.sgss.iter().enumerate() {
-            for (w, worker) in sgs.pool.workers.iter().enumerate() {
-                out[s * self.shared.workers_per_sgs + w] = worker
-                    .sandboxes
-                    .iter()
-                    .filter(|(_, set)| set.active() > 0)
-                    .count();
-            }
+        let mut out = Vec::with_capacity(self.shared.shards.len() * self.shared.workers_per_sgs);
+        for cell in &self.shared.shards {
+            let st = cell.state.lock().unwrap();
+            out.extend(st.shard.sgs.warm_kind_counts());
         }
         out
     }
 
-    /// Aggregate latency/deadline metrics across completed requests.
+    /// Aggregate latency/deadline metrics across completed requests —
+    /// per-shard metrics merged on read.
     pub fn summary(&self) -> SummaryRow {
-        let st = self.shared.state.lock().unwrap();
-        st.core.metrics.summary_row()
+        let mut m = Metrics::new();
+        for cell in &self.shared.shards {
+            let st = cell.state.lock().unwrap();
+            m.merge(&st.shard.metrics);
+        }
+        m.summary_row()
     }
 
-    /// Total request-paid cold starts so far.
+    /// Total request-paid cold starts so far, across all shards.
     pub fn total_cold_starts(&self) -> u64 {
-        let st = self.shared.state.lock().unwrap();
-        st.core.total_cold_starts()
+        self.shared
+            .shards
+            .iter()
+            .map(|cell| cell.state.lock().unwrap().shard.sgs.cold_starts())
+            .sum()
     }
 
     /// Drain and stop all workers.
     pub fn shutdown(mut self) {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.shutdown = true;
-        }
-        self.shared.cv.notify_all();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        shutdown_workers(&self.shared, std::mem::take(&mut self.handles));
         if let Some(t) = self.ticker.take() {
             let _ = t.join();
         }
+    }
+}
+
+/// Start-failure teardown: stop every worker thread and join.
+fn shutdown_workers(shared: &Shared, handles: Vec<JoinHandle<()>>) {
+    shared.shutdown.store(true, Ordering::SeqCst);
+    for cell in &shared.shards {
+        let mut st = cell.state.lock().unwrap();
+        st.shutdown = true;
+        drop(st);
+        cell.cv.notify_all();
+    }
+    for h in handles {
+        let _ = h.join();
     }
 }
 
@@ -637,23 +776,27 @@ fn worker_main(
     let _ = ready.send(Ok(()));
     drop(ready);
 
-    let mut fx: Vec<Effect> = Vec::new();
+    // Shard-major thread layout: this thread serves worker `w` of
+    // shard `s`, and only ever takes that shard's lock on the hot path.
+    let s = t / shared.workers_per_sgs;
+    let w = t % shared.workers_per_sgs;
+    let cell = &shared.shards[s];
+
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = cell.state.lock().unwrap();
             loop {
                 if st.shutdown {
                     return;
                 }
-                if let Some(j) = st.jobs[t].pop() {
+                if let Some(j) = st.jobs[w].pop() {
                     break j;
                 }
-                st = shared.cv.wait(st).unwrap();
+                st = cell.cv.wait(st).unwrap();
             }
         };
         match job {
             Job::Setup {
-                sgs,
                 worker,
                 epoch,
                 f,
@@ -662,25 +805,29 @@ fn worker_main(
             } => {
                 let result = exec.warm_up(&artifact);
                 let now = shared.now();
-                let mut st = shared.state.lock().unwrap();
-                if prewarm {
-                    st.prewarm_outstanding -= 1;
-                    if let Err(e) = &result {
-                        st.prewarm_error
-                            .get_or_insert_with(|| format!("worker {t}: prewarm {artifact}: {e}"));
-                    }
-                }
+                let mut st = cell.state.lock().unwrap();
                 // Mark the sandbox warm even on a failed compile: the
                 // executor retries at execute time, and a second failure
                 // fails the request — the table and the cache reconverge
                 // either way.
-                st.core.setup_done(now, sgs, worker, epoch, f, &mut fx);
-                drain_effects(&mut st, now, &mut fx, shared.workers_per_sgs);
+                let mut fx = Vec::new();
+                st.shard.setup_done(now, worker, epoch, f, &mut fx);
+                let remote = drain_local(&mut st, now, &mut fx, &shared.registry);
                 drop(st);
-                shared.cv.notify_all();
+                cell.cv.notify_all();
+                apply_remote(&shared, now, remote);
+                if prewarm {
+                    let mut pw = shared.prewarm.lock().unwrap();
+                    pw.outstanding -= 1;
+                    if let Err(e) = &result {
+                        pw.error
+                            .get_or_insert_with(|| format!("worker {t}: prewarm {artifact}: {e}"));
+                    }
+                    drop(pw);
+                    shared.prewarm_cv.notify_all();
+                }
             }
             Job::Run {
-                sgs,
                 worker,
                 epoch,
                 req,
@@ -704,7 +851,7 @@ fn worker_main(
                 let exec_us = t0.elapsed().as_micros() as u64;
 
                 let now = shared.now();
-                let mut st = shared.state.lock().unwrap();
+                let mut st = cell.state.lock().unwrap();
                 if let Some(p) = st.pending.get_mut(&req.0) {
                     match result {
                         Ok(outputs) => p.functions.push(FnCompletion {
@@ -720,54 +867,110 @@ fn worker_main(
                         Err(_) => p.failed = true,
                     }
                 }
-                st.core.fn_complete(now, sgs, worker, epoch, req, f, &mut fx);
-                drain_effects(&mut st, now, &mut fx, shared.workers_per_sgs);
+                let mut fx = Vec::new();
+                st.shard.fn_complete(now, worker, epoch, req, f, &mut fx);
+                let remote = drain_local(&mut st, now, &mut fx, &shared.registry);
                 drop(st);
-                shared.cv.notify_all();
+                cell.cv.notify_all();
+                apply_remote(&shared, now, remote);
             }
         }
     }
 }
 
-/// Background control loops: the §4.3.1 estimator tick and §5.2 LBS
-/// scaling evaluation, in wall-clock time. Sleeps in short slices so
-/// shutdown stays prompt.
+/// Background control loops: the §4.3.1 estimator tick per shard and
+/// the §5.2 LBS scaling evaluation, in wall-clock time. Each shard is
+/// locked on its own — a tick on shard 0 never blocks dispatching on
+/// shard 1. Sleeps in short slices so shutdown stays prompt.
 fn ticker_main(shared: Arc<Shared>) {
     const SLICE: Duration = Duration::from_millis(20);
-    let (est_interval, control_interval) = {
-        let st = shared.state.lock().unwrap();
-        (
-            st.core.cfg.sgs.estimate_interval,
-            st.core.cfg.lbs.control_interval,
-        )
-    };
-    let mut fx: Vec<Effect> = Vec::new();
+    let est_interval = shared.cfg.sgs.estimate_interval;
+    let control_interval = shared.cfg.lbs.control_interval;
     let mut last_est: Micros = 0;
     let mut last_control: Micros = 0;
     loop {
         std::thread::sleep(SLICE);
-        let now = shared.now();
-        let mut st = shared.state.lock().unwrap();
-        if st.shutdown {
+        if shared.shutdown.load(Ordering::SeqCst) {
             return;
         }
-        let mut acted = false;
+        let now = shared.now();
         if now.saturating_sub(last_est) >= est_interval {
             last_est = now;
-            for s in 0..st.core.sgs_count() {
-                st.core.estimator_tick(now, SgsId(s as u16), &mut fx);
+            for cell in &shared.shards {
+                let mut fx = Vec::new();
+                let mut st = cell.state.lock().unwrap();
+                if st.shutdown {
+                    return;
+                }
+                let reports = st.shard.estimator_tick(now, &mut fx);
+                let remote = drain_local(&mut st, now, &mut fx, &shared.registry);
+                drop(st);
+                cell.cv.notify_all();
+                apply_remote(&shared, now, remote);
+                if !reports.is_empty() {
+                    let mut front = shared.front.lock().unwrap();
+                    for (dag_id, report) in reports {
+                        front.lbs.update_report(dag_id, report);
+                    }
+                }
             }
-            acted = true;
         }
         if now.saturating_sub(last_control) >= control_interval {
             last_control = now;
-            st.core.lbs_control(now, &mut fx);
-            acted = true;
-        }
-        if acted {
-            drain_effects(&mut st, now, &mut fx, shared.workers_per_sgs);
-            drop(st);
-            shared.cv.notify_all();
+            // Front critical section: the per-DAG scaling decisions.
+            let actions: Vec<crate::lbs::ScaleAction> = {
+                let mut front = shared.front.lock().unwrap();
+                let mut v = Vec::new();
+                for dag in shared.registry.iter() {
+                    v.extend(front.lbs.control_tick(dag.id, dag.slack()));
+                }
+                v
+            };
+            // Apply each action under its target shard's lock only.
+            // KEEP IN SYNC with `Coordinator::lbs_control`: the per-arm
+            // semantics (Out → prime, In → gradual-drain no-op, Drop →
+            // release_dag, ResetWindows → active+removed members) must
+            // match the sim facade's — only the lock choreography may
+            // differ between the drivers.
+            for action in actions {
+                match action {
+                    crate::lbs::ScaleAction::Out {
+                        dag,
+                        sgs,
+                        prime_target,
+                        expected_rate,
+                    } => {
+                        let cell = &shared.shards[sgs.0 as usize];
+                        let mut fx = Vec::new();
+                        let mut st = cell.state.lock().unwrap();
+                        st.shard.prime(now, dag, prime_target, expected_rate, &mut fx);
+                        let remote = drain_local(&mut st, now, &mut fx, &shared.registry);
+                        drop(st);
+                        cell.cv.notify_all();
+                        apply_remote(&shared, now, remote);
+                    }
+                    crate::lbs::ScaleAction::In { .. } => {
+                        // Gradual drain: the shard keeps serving
+                        // discounted lottery traffic.
+                    }
+                    crate::lbs::ScaleAction::Drop { dag, sgs } => {
+                        let cell = &shared.shards[sgs.0 as usize];
+                        cell.state.lock().unwrap().shard.release_dag(dag);
+                    }
+                    crate::lbs::ScaleAction::ResetWindows { dag } => {
+                        let members: Vec<SgsId> = {
+                            let front = shared.front.lock().unwrap();
+                            let mut m = front.lbs.active_sgs(dag).to_vec();
+                            m.extend(front.lbs.removed_sgs(dag));
+                            m
+                        };
+                        for sgs in members {
+                            let cell = &shared.shards[sgs.0 as usize];
+                            cell.state.lock().unwrap().shard.reset_qdelay_window(dag);
+                        }
+                    }
+                }
+            }
         }
     }
 }
@@ -782,6 +985,7 @@ mod tests {
     fn stub_server(workers: usize, dags: Vec<DagSpec>, prewarm: &[&str]) -> Server {
         let factory = Arc::new(StubExecutorFactory::default());
         let opts = RtOptions {
+            num_sgs: 1,
             workers,
             policy: SchedPolicy::Srsf,
             background_ticks: false,
@@ -827,6 +1031,31 @@ mod tests {
         let dag = DagSpec::single(DagId(0), "score", 5 * MS, 100 * MS, 128, 500 * MS);
         let server = stub_server(1, vec![dag], &[]);
         assert!(server.submit("nope", vec![1.0], 500_000).recv().is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn sharded_server_prewarms_every_shard() {
+        let dags = vec![
+            DagSpec::single(DagId(0), "score", 5 * MS, 100 * MS, 128, 500 * MS),
+            DagSpec::single(DagId(1), "rank", 5 * MS, 100 * MS, 128, 500 * MS),
+        ];
+        let factory = Arc::new(StubExecutorFactory::default());
+        let opts = RtOptions {
+            num_sgs: 2,
+            workers: 2,
+            policy: SchedPolicy::Srsf,
+            background_ticks: false,
+            pool_mb: 4 * 1024,
+        };
+        let server =
+            Server::start_with(factory, dags, opts, &["score"], Manifest::empty()).unwrap();
+        // 2 shards × 2 workers, all prewarmed with one artifact
+        let warm = server.warm_counts();
+        assert_eq!(warm.len(), 4);
+        assert!(warm.iter().all(|&n| n >= 1), "warm on every shard: {warm:?}");
+        let c = server.submit("score", vec![1.0, 1.0], 500_000).recv().unwrap();
+        assert!(!c.cold, "prewarm covers whichever shard routing picked");
         server.shutdown();
     }
 

@@ -113,6 +113,22 @@ impl Sgs {
         *self.estimates.get(&f).unwrap_or(&0)
     }
 
+    /// Distinct warm (active) sandbox kinds per worker, in pool order —
+    /// the observability view the realtime server exposes per worker
+    /// thread.
+    pub fn warm_kind_counts(&self) -> Vec<usize> {
+        self.pool
+            .workers
+            .iter()
+            .map(|w| {
+                w.sandboxes
+                    .iter()
+                    .filter(|(_, set)| set.active() > 0)
+                    .count()
+            })
+            .collect()
+    }
+
     /// Total proactive (active) sandboxes for a DAG across the pool —
     /// the lottery-ticket count piggybacked to the LBS (§5.2.3).
     pub fn dag_sandbox_count(&self, dag: &crate::dag::DagSpec) -> u32 {
@@ -540,6 +556,7 @@ mod tests {
             .sandboxes
             .finish_setup(dag.fn_id(0))
             .unwrap();
+        assert_eq!(sgs.warm_kind_counts(), vec![1, 0]);
         sgs.enqueue(qfn(1, dag, 0), true);
         let d = sgs.try_dispatch(1000);
         assert_eq!(d.len(), 1);
