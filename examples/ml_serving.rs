@@ -55,6 +55,7 @@ fn stub_demo() {
     let factory = Arc::new(StubExecutorFactory {
         setup_cost: Duration::from_millis(25),
         exec_cost: Duration::from_millis(2),
+        ..Default::default()
     });
     let server = Server::start_with(
         factory,

@@ -1,0 +1,74 @@
+//! Open-loop end-to-end anchor (ISSUE 4): SRSF vs FIFO on the stub
+//! executor, in the same process, replaying the *same* W2
+//! sinusoid-modulated arrival schedule against a fresh wall-clock
+//! server each — the harness form of the paper's headline claim
+//! (deadline attainment under realistic load, §7.2).
+//!
+//! Writes `BENCH_e2e.json` next to the hotpath/scale anchors with, per
+//! policy: deadline-attainment fraction, p50/p99/p99.9 e2e latency,
+//! cold-start count, and requests/sec — so scheduling-policy and
+//! serving-path PRs have an in-repo end-to-end number to diff against.
+//!
+//! The run is time-scaled 0.5× (fast-forward 2×: service times,
+//! deadlines, and arrival gaps all halved together), keeping the bench
+//! under ~15 s of wall time without changing the workload's shape.
+
+use archipelago::config::SchedPolicy;
+use archipelago::loadgen::{self, LoadgenOptions, StubLoadtestConfig};
+use archipelago::util::json::{self, Json};
+
+fn main() {
+    println!("== open-loop e2e bench (W2 schedule, stub executor) ==");
+    let base = StubLoadtestConfig {
+        duration_s: 12,
+        time_scale: 0.5,
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    let mut attainment = [0.0f64; 2];
+    for (i, policy) in [SchedPolicy::Srsf, SchedPolicy::Fifo].into_iter().enumerate() {
+        let cfg = StubLoadtestConfig {
+            policy,
+            ..base.clone()
+        };
+        let (server, schedule) = loadgen::prepare_stub(&cfg).expect("stub server start");
+        let label = loadgen::policy_label(policy);
+        if i == 0 {
+            println!(
+                "{} requests over {:.1}s wall, {} SGS x {} workers, util {:.0}%",
+                schedule.len(),
+                schedule.last().map(|&(t, _)| t as f64 / 1e6).unwrap_or(0.0),
+                cfg.num_sgs,
+                cfg.workers,
+                cfg.util * 100.0,
+            );
+        }
+        let report = loadgen::run(&server, &schedule, label, &LoadgenOptions::default());
+        println!("{}", report.format());
+        attainment[i] = report.attainment;
+        server.shutdown();
+        rows.push(report.to_json());
+    }
+    println!(
+        "attainment: srsf {:.2}% vs fifo {:.2}%",
+        attainment[0] * 100.0,
+        attainment[1] * 100.0
+    );
+    let out = json::obj(vec![
+        ("bench", Json::Str("e2e".into())),
+        ("workload", Json::Str("w2".into())),
+        ("num_sgs", Json::Int(base.num_sgs as i64)),
+        ("workers_per_sgs", Json::Int(base.workers as i64)),
+        ("duration_virtual_s", Json::Int(base.duration_s as i64)),
+        ("time_scale", Json::Num(base.time_scale)),
+        ("util_target", Json::Num(base.util)),
+        ("dags_per_class", Json::Int(base.dags_per_class as i64)),
+        ("seed", Json::Int(base.seed as i64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_e2e.json";
+    match std::fs::write(path, out.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -38,6 +38,7 @@ fn start_server(num_sgs: usize) -> Server {
     let factory = Arc::new(StubExecutorFactory {
         setup_cost: Duration::ZERO,
         exec_cost: Duration::ZERO,
+        ..Default::default()
     });
     let opts = RtOptions {
         num_sgs,

@@ -24,7 +24,10 @@
 //!   routing, per-DAG SGS scaling (§5).
 //! * [`platform`] — full-system assembly + request lifecycle.
 //! * [`baseline`] — the paper's comparison stacks (§2.4, §7.1).
-//! * [`workload`] — arrival processes, C1–C4 classes, SAR synthesis.
+//! * [`workload`] — arrival processes, C1–C4 classes, SAR synthesis,
+//!   pre-materialized schedules.
+//! * [`loadgen`] — open-loop wall-clock load harness (deadline
+//!   attainment against the real-time server).
 //! * [`metrics`] — collectors and reports.
 //! * [`state_store`] — durable service state + fault tolerance (§6.1).
 //! * [`runtime`] — PJRT client wrapper executing `artifacts/*.hlo.txt`.
@@ -40,6 +43,7 @@ pub mod config;
 pub mod dag;
 pub mod experiments;
 pub mod lbs;
+pub mod loadgen;
 pub mod metrics;
 pub mod platform;
 pub mod runtime;

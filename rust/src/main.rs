@@ -8,6 +8,9 @@
 //! * `figures`  — regenerate the paper's tables/figures (CSV + summary).
 //! * `serve`    — real-time serving of the compiled artifacts (PJRT on
 //!   the request path); demo load generator included.
+//! * `loadtest` — open-loop wall-clock load harness: replay a W1/W2
+//!   schedule against the real-time server and report deadline
+//!   attainment + tail latencies (the paper's headline quantities).
 //! * `validate` — quick self-check: config, artifacts, determinism.
 
 use std::process::ExitCode;
@@ -34,6 +37,7 @@ fn main() -> ExitCode {
         "baseline" => cmd_baseline(rest),
         "figures" => cmd_figures(rest),
         "serve" => cmd_serve(rest),
+        "loadtest" => cmd_loadtest(rest),
         "validate" => cmd_validate(rest),
         "--help" | "help" => {
             println!("{}", usage());
@@ -58,6 +62,7 @@ fn usage() -> String {
      \x20 baseline   run a baseline stack (--kind fifo|sparrow)\n\
      \x20 figures    regenerate paper tables/figures (--all or --id <id>)\n\
      \x20 serve      real-time PJRT serving demo (needs `make artifacts`)\n\
+     \x20 loadtest   open-loop wall-clock load harness (--stub)\n\
      \x20 validate   config + artifact + determinism self-check\n\n\
      Run `archipelago <subcommand> --help` for options."
         .into()
@@ -288,6 +293,7 @@ fn serve_stub_demo(
     let factory = Arc::new(StubExecutorFactory {
         setup_cost: Duration::from_millis(20),
         exec_cost: Duration::from_millis(2),
+        ..Default::default()
     });
     let opts = RtOptions {
         num_sgs,
@@ -343,6 +349,105 @@ fn serve_stub_demo(
         server.total_cold_starts()
     );
     server.shutdown();
+    Ok(())
+}
+
+/// `loadtest --stub`: the open-loop serving harness — materialize a
+/// W1/W2 schedule, replay it against a fresh stub server, print the
+/// deadline-attainment report (the same quantities `benches/e2e.rs`
+/// writes to `BENCH_e2e.json`).
+fn cmd_loadtest(raw: &[String]) -> Result<(), CliError> {
+    use archipelago::loadgen::{self, LoadgenOptions, StubLoadtestConfig};
+    use archipelago::util::json::{self, Json};
+
+    let cmd = Command::new(
+        "loadtest",
+        "open-loop wall-clock load harness (deadline attainment)",
+    )
+    .flag("stub", "run on the stub executor (required; no artifacts needed)")
+    .opt("workload", "w1 | w2 (default w2)")
+    .opt("policy", "srsf | fifo | both (default both)")
+    .opt("duration", "schedule horizon in virtual seconds (default 15)")
+    .opt(
+        "time-scale",
+        "stretch arrivals/service times/deadlines by this factor (default 1.0)",
+    )
+    .opt("util", "target mean utilization of the stub cores (default 0.8)")
+    .opt("sgs", "coordinator shards (default 2)")
+    .opt("workers", "worker threads per shard (default 2)")
+    .opt("dags-per-class", "DAGs per class C1-C4 (default 1)")
+    .opt("seed", "rng seed (default 42)")
+    .opt("out", "also write the run report JSON to this path");
+    let args = cmd.parse(raw)?;
+    if !args.has("stub") {
+        return Err(CliError(
+            "loadtest currently supports --stub only (artifact DAGs have no \
+             workload-class mapping yet) — pass --stub"
+                .into(),
+        ));
+    }
+    let kind = parse_workload(&args)?;
+    let policies = match args.get_or("policy", "both") {
+        "srsf" => vec![SchedPolicy::Srsf],
+        "fifo" => vec![SchedPolicy::Fifo],
+        "both" => vec![SchedPolicy::Srsf, SchedPolicy::Fifo],
+        other => {
+            return Err(CliError(format!(
+                "--policy must be srsf|fifo|both, got '{other}'"
+            )))
+        }
+    };
+    let base = StubLoadtestConfig {
+        kind,
+        num_sgs: args.get_u64("sgs", 2)? as usize,
+        workers: args.get_u64("workers", 2)? as usize,
+        duration_s: args.get_u64("duration", 15)?,
+        time_scale: args.get_f64("time-scale", 1.0)?,
+        util: args.get_f64("util", 0.8)?,
+        dags_per_class: args.get_u64("dags-per-class", 1)? as usize,
+        seed: args.get_u64("seed", 42)?,
+        ..StubLoadtestConfig::default()
+    };
+    if base.time_scale <= 0.0 || !base.time_scale.is_finite() {
+        return Err(CliError("--time-scale must be a positive number".into()));
+    }
+    if base.num_sgs == 0 || base.workers == 0 {
+        return Err(CliError("--sgs and --workers must be at least 1".into()));
+    }
+    if base.util <= 0.0 || !base.util.is_finite() {
+        return Err(CliError("--util must be a positive number".into()));
+    }
+    let mut rows = Vec::new();
+    for policy in policies {
+        let cfg = StubLoadtestConfig { policy, ..base.clone() };
+        let (server, schedule) =
+            loadgen::prepare_stub(&cfg).map_err(|e| CliError(e.to_string()))?;
+        let label = loadgen::policy_label(policy);
+        println!(
+            "loadtest [{label}]: {} requests over {:.1}s wall ({:?}, {} SGS x {} workers, \
+             util {:.0}%, time-scale {})",
+            schedule.len(),
+            schedule.last().map(|&(t, _)| t as f64 / 1e6).unwrap_or(0.0),
+            kind,
+            cfg.num_sgs,
+            cfg.workers,
+            cfg.util * 100.0,
+            cfg.time_scale,
+        );
+        let report = loadgen::run(&server, &schedule, label, &LoadgenOptions::default());
+        println!("{}", report.format());
+        server.shutdown();
+        rows.push(report.to_json());
+    }
+    if let Some(out) = args.get("out") {
+        let doc = json::obj(vec![
+            ("bench", Json::Str("loadtest".into())),
+            ("workload", Json::Str(format!("{kind:?}").to_lowercase())),
+            ("rows", Json::Arr(rows)),
+        ]);
+        std::fs::write(out, doc.to_pretty()).map_err(|e| CliError(e.to_string()))?;
+        println!("report written to {out}");
+    }
     Ok(())
 }
 

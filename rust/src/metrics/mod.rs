@@ -43,6 +43,11 @@ pub struct GroupStats {
     pub completed: u64,
     pub deadlines_met: u64,
     pub cold_starts: u64,
+    /// Requests that finished their scheduling lifecycle but whose
+    /// execution failed (executor error). A failed request stays in
+    /// `completed` (its latency sample is real) but never counts in
+    /// `deadlines_met` — see [`Metrics::record_failure`].
+    pub failed: u64,
 }
 
 impl Default for GroupStats {
@@ -53,6 +58,7 @@ impl Default for GroupStats {
             completed: 0,
             deadlines_met: 0,
             cold_starts: 0,
+            failed: 0,
         }
     }
 }
@@ -68,6 +74,7 @@ impl GroupStats {
         self.completed += other.completed;
         self.deadlines_met += other.deadlines_met;
         self.cold_starts += other.cold_starts;
+        self.failed += other.failed;
     }
 
     pub fn deadline_met_rate(&self) -> f64 {
@@ -80,6 +87,42 @@ impl GroupStats {
     pub fn miss_rate(&self) -> f64 {
         1.0 - self.deadline_met_rate()
     }
+
+    /// The shared deadline-attainment / tail-percentile summary: the
+    /// paper's headline quantities for one group, computed once here so
+    /// the sim `SummaryRow` path and the loadgen report cannot drift.
+    /// Percentiles come from the log-bucketed e2e histogram (bucket low
+    /// edge, clamped to the observed min/max — see
+    /// [`LogHistogram::quantile`]).
+    pub fn attainment_summary(&self) -> AttainmentSummary {
+        let (p50, _, p99, p999, max) = self.e2e.tail_summary();
+        AttainmentSummary {
+            completed: self.completed,
+            failed: self.failed,
+            attainment: self.deadline_met_rate(),
+            p50,
+            p99,
+            p999,
+            max,
+        }
+    }
+}
+
+/// Deadline-attainment fraction + tail percentiles for one stats group —
+/// the quantity set behind the paper's ">99% of requests meet their
+/// deadline" claim. Produced by [`GroupStats::attainment_summary`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttainmentSummary {
+    pub completed: u64,
+    pub failed: u64,
+    /// `deadlines_met / completed`; 1.0 for an empty group. Failed
+    /// requests count against attainment (they are in `completed` but
+    /// never in `deadlines_met`).
+    pub attainment: f64,
+    pub p50: u64,
+    pub p99: u64,
+    pub p999: u64,
+    pub max: u64,
 }
 
 /// The run-wide collector.
@@ -158,6 +201,31 @@ impl Metrics {
         }
     }
 
+    /// Reclassify an already-recorded completion as *failed* (executor
+    /// error). The latency sample stays — the request really did occupy
+    /// the platform end-to-end — but a failed request can never count
+    /// as having met its deadline, so the timing-based `deadlines_met`
+    /// credit (and its interval entry) is taken back. Call with the
+    /// same `outcome` that was passed to [`Metrics::record_completion`].
+    pub fn record_failure(&mut self, outcome: &RequestOutcome) {
+        let met = outcome.deadline_met();
+        for g in [
+            &mut self.total,
+            self.per_dag.entry(outcome.dag.0).or_default(),
+        ] {
+            g.failed += 1;
+            if met {
+                g.deadlines_met = g.deadlines_met.saturating_sub(1);
+            }
+        }
+        if met && self.interval_len > 0 {
+            let idx = (outcome.completion / self.interval_len) as usize;
+            if let Some(iv) = self.intervals.get_mut(idx) {
+                iv.0 = iv.0.saturating_sub(1);
+            }
+        }
+    }
+
     /// Record one function's queuing delay.
     pub fn record_qdelay(&mut self, dag: DagId, delay: Micros) {
         self.total.qdelay.record(delay);
@@ -179,16 +247,17 @@ impl Metrics {
     /// The paper's headline row: p50/p90/p99/p999/max E2E latency (µs),
     /// % deadlines met, cold starts.
     pub fn summary_row(&self) -> SummaryRow {
-        let (p50, p90, p99, p999, max) = self.total.e2e.tail_summary();
+        let att = self.total.attainment_summary();
         SummaryRow {
-            completed: self.total.completed,
-            p50,
-            p90,
-            p99,
-            p999,
-            max,
-            deadline_met_rate: self.total.deadline_met_rate(),
+            completed: att.completed,
+            p50: att.p50,
+            p90: self.total.e2e.quantile(0.90),
+            p99: att.p99,
+            p999: att.p999,
+            max: att.max,
+            deadline_met_rate: att.attainment,
             cold_starts: self.total.cold_starts,
+            failed: att.failed,
             qdelay_p50: self.total.qdelay.quantile(0.5),
             qdelay_p99: self.total.qdelay.quantile(0.99),
             qdelay_p999: self.total.qdelay.quantile(0.999),
@@ -220,6 +289,7 @@ impl Metrics {
             ("max_us", Json::Int(row.max as i64)),
             ("deadline_met_rate", Json::Num(row.deadline_met_rate)),
             ("cold_starts", Json::Int(row.cold_starts as i64)),
+            ("failed", Json::Int(row.failed as i64)),
             ("qdelay_p50_us", Json::Int(row.qdelay_p50 as i64)),
             ("qdelay_p99_us", Json::Int(row.qdelay_p99 as i64)),
             ("per_dag", Json::Arr(per_dag)),
@@ -238,6 +308,9 @@ pub struct SummaryRow {
     pub max: u64,
     pub deadline_met_rate: f64,
     pub cold_starts: u64,
+    /// Completed requests whose execution failed (always 0 in the
+    /// simulator; the real-time driver records executor errors here).
+    pub failed: u64,
     pub qdelay_p50: u64,
     pub qdelay_p99: u64,
     pub qdelay_p999: u64,
@@ -245,7 +318,7 @@ pub struct SummaryRow {
 
 impl SummaryRow {
     pub fn format_line(&self, label: &str) -> String {
-        format!(
+        let mut line = format!(
             "{label:<22} n={:<9} p50={:<9} p99={:<10} p99.9={:<10} max={:<10} met={:>6.2}%  cold={}",
             self.completed,
             fmt_us(self.p50),
@@ -254,7 +327,11 @@ impl SummaryRow {
             fmt_us(self.max),
             self.deadline_met_rate * 100.0,
             self.cold_starts,
-        )
+        );
+        if self.failed > 0 {
+            line.push_str(&format!("  failed={}", self.failed));
+        }
+        line
     }
 }
 
@@ -439,6 +516,94 @@ mod tests {
             assert_eq!(a.e2e.tail_summary(), g.e2e.tail_summary());
             assert_eq!(b.qdelay.tail_summary(), g.qdelay.tail_summary());
         }
+    }
+
+    #[test]
+    fn record_failure_reclassifies_a_timing_met_completion() {
+        let mut m = Metrics::new();
+        let ok = outcome(0, 0, 10 * MS, 20 * MS, 0); // met on timing
+        let boom = outcome(0, 0, 15 * MS, 20 * MS, 1); // met on timing, will fail
+        m.record_completion(&ok);
+        m.record_completion(&boom);
+        assert_eq!(m.total.deadlines_met, 2);
+        m.record_failure(&boom);
+        assert_eq!(m.total.completed, 2, "failed request stays completed");
+        assert_eq!(m.total.failed, 1);
+        assert_eq!(m.total.deadlines_met, 1, "failure revokes the met credit");
+        assert!((m.total.deadline_met_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(m.dag(DagId(0)).unwrap().failed, 1);
+        // interval credit taken back too
+        assert_eq!(m.interval_met_rates(), vec![0.5]);
+        // a timing-missed failure changes only the failed counter
+        let late = outcome(0, 0, 50 * MS, 20 * MS, 0);
+        m.record_completion(&late);
+        m.record_failure(&late);
+        assert_eq!(m.total.failed, 2);
+        assert_eq!(m.total.deadlines_met, 1);
+        // summary row carries the counter
+        assert_eq!(m.summary_row().failed, 2);
+        assert!(m.summary_row().format_line("x").contains("failed=2"));
+    }
+
+    #[test]
+    fn merge_carries_failed_counts() {
+        let mut a = Metrics::new();
+        let boom = outcome(0, 0, 10 * MS, 20 * MS, 0);
+        a.record_completion(&boom);
+        a.record_failure(&boom);
+        let mut b = Metrics::new();
+        b.record_completion(&outcome(0, 0, 5 * MS, 20 * MS, 0));
+        b.merge(&a);
+        assert_eq!(b.total.completed, 2);
+        assert_eq!(b.total.failed, 1);
+        assert_eq!(b.total.deadlines_met, 1);
+    }
+
+    #[test]
+    fn attainment_summary_matches_summary_row_and_pins_bucket_edges() {
+        // Values 0..32 land in the histogram's exact unit buckets, so
+        // percentiles are exact there: nearest-rank over 32 samples.
+        let mut g = GroupStats::default();
+        for v in 0..32u64 {
+            g.e2e.record(v);
+            g.completed += 1;
+            g.deadlines_met += 1;
+        }
+        let att = g.attainment_summary();
+        assert_eq!(att.p50, 15, "rank ceil(0.5*32)=16 → value 15");
+        assert_eq!(att.p99, 31, "rank ceil(0.99*32)=32 → value 31");
+        assert_eq!(att.p999, 31);
+        assert_eq!(att.max, 31);
+        assert_eq!(att.attainment, 1.0);
+        assert_eq!(att.failed, 0);
+
+        // Above the exact range, a quantile returns the containing
+        // bucket's low edge clamped to the observed min/max: a single
+        // large sample pins every percentile to itself.
+        let mut one = GroupStats::default();
+        one.e2e.record(1_000_003);
+        one.completed = 1;
+        let att1 = one.attainment_summary();
+        assert_eq!(att1.p50, 1_000_003, "clamped to observed min");
+        assert_eq!(att1.p999, 1_000_003);
+
+        // Empty group: attainment defined as 1.0, percentiles 0.
+        let empty = GroupStats::default().attainment_summary();
+        assert_eq!(empty.attainment, 1.0);
+        assert_eq!((empty.p50, empty.p99, empty.p999), (0, 0, 0));
+
+        // The SummaryRow path must agree with the helper field-for-field.
+        let mut m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_completion(&outcome(0, 0, i * MS, 200 * MS, 0));
+        }
+        let att = m.total.attainment_summary();
+        let row = m.summary_row();
+        assert_eq!(row.p50, att.p50);
+        assert_eq!(row.p99, att.p99);
+        assert_eq!(row.p999, att.p999);
+        assert_eq!(row.deadline_met_rate, att.attainment);
+        assert_eq!(row.completed, att.completed);
     }
 
     #[test]

@@ -12,6 +12,16 @@
 //! actual computation; the completion call-back is wall-clock time doing
 //! what virtual time does in the simulator.
 //!
+//! Admission is *non-blocking*: [`Server::submit_dag_async`] routes,
+//! enqueues, and returns; the terminal [`RequestResult`] — done or an
+//! explicit failure carrying the executor error — is delivered to a
+//! caller-supplied [`CompletionSink`] exactly once. One sink can serve
+//! any number of in-flight requests, so a single open-loop generator
+//! thread ([`crate::loadgen`]) drives the whole cluster without parking
+//! a thread per request. The blocking [`Server::submit`] /
+//! [`Server::submit_dag`] are thin channel-sink wrappers kept for
+//! closed-loop callers.
+//!
 //! Concurrency (DESIGN.md §Sharding): there is no global lock. Each
 //! coordinator [`Shard`] — one SGS, its request states, its metrics,
 //! its worker job queues — sits behind its own mutex, and the routing
@@ -141,19 +151,114 @@ impl Default for RtOptions {
     }
 }
 
-/// Who gets the reply when a request finishes.
-enum Reply {
-    Single(Sender<Completion>),
-    Dag(Sender<DagCompletion>),
+/// Terminal result of one admitted request, delivered to its
+/// [`CompletionSink`] exactly once.
+#[derive(Debug, Clone)]
+pub enum RequestResult {
+    /// Every function executed; the timing verdict is inside.
+    Done(DagCompletion),
+    /// The request's lifecycle ended without a usable result: an
+    /// executor error, or the server shut down with it still in flight.
+    Failed(FailedCompletion),
 }
 
-/// Per-request reply bookkeeping (the driver-side shadow of a shard's
+impl RequestResult {
+    pub fn req(&self) -> RequestId {
+        match self {
+            RequestResult::Done(c) => c.req,
+            RequestResult::Failed(f) => f.req,
+        }
+    }
+}
+
+/// Explicit failure record — the non-blocking path's replacement for the
+/// old "dropped reply channel" signal, which could not say *why*.
+///
+/// When a function's executor errors, the scheduler still runs the
+/// request's remaining functions (the scheduling lifecycle — and with it
+/// queue/core accounting — completes exactly as for a success); the
+/// first error observed is what `error` carries.
+#[derive(Debug, Clone)]
+pub struct FailedCompletion {
+    pub req: RequestId,
+    /// Admit → failure delivery.
+    pub e2e_us: u64,
+    /// First executor error observed, or the shutdown notice.
+    pub error: String,
+    /// Functions that did complete before/alongside the failure.
+    pub functions: Vec<FnCompletion>,
+}
+
+/// Where a request's terminal result is delivered.
+///
+/// `complete` is called exactly once per admitted request, from a worker
+/// thread, *after* the request's home-shard lock has been released — so
+/// a sink may take its own locks and may even submit new requests,
+/// though it runs on the serving path and should stay cheap. One sink
+/// instance may serve many in-flight requests (the open-loop load
+/// generator shares a single `Arc` across thousands), which is what
+/// lets one generator thread keep the whole cluster busy without
+/// parking a thread per request.
+pub trait CompletionSink: Send + Sync {
+    fn complete(&self, result: RequestResult);
+}
+
+/// Results resolved under a shard lock, delivered after its release (a
+/// sink must never run with a shard lock held).
+type Deliveries = Vec<(Arc<dyn CompletionSink>, RequestResult)>;
+
+fn deliver(done: Deliveries) {
+    for (sink, result) in done {
+        sink.complete(result);
+    }
+}
+
+/// The trivial sink behind the blocking [`Server::submit_dag`]: forward
+/// `Done` to an mpsc channel; drop it on `Failed`, so the caller
+/// observes a closed channel — the pre-sink contract, unchanged.
+struct DagChannelSink(Sender<DagCompletion>);
+
+impl CompletionSink for DagChannelSink {
+    fn complete(&self, result: RequestResult) {
+        if let RequestResult::Done(c) = result {
+            let _ = self.0.send(c);
+        }
+    }
+}
+
+/// Single-artifact flavor for [`Server::submit`]: unwraps the one
+/// function record into the flat [`Completion`] shape.
+struct SingleChannelSink(Sender<Completion>);
+
+impl CompletionSink for SingleChannelSink {
+    fn complete(&self, result: RequestResult) {
+        if let RequestResult::Done(c) = result {
+            if let Some(f) = c.functions.into_iter().next() {
+                let _ = self.0.send(Completion {
+                    artifact: f.artifact,
+                    worker: f.worker,
+                    cold: f.cold,
+                    queue_us: f.queue_us,
+                    setup_us: f.setup_us,
+                    exec_us: f.exec_us,
+                    e2e_us: c.e2e_us,
+                    outputs: f.outputs,
+                });
+            }
+        }
+    }
+}
+
+/// Per-request driver bookkeeping (the driver-side shadow of a shard's
 /// request table; lives on the request's home shard).
 struct Pending {
-    reply: Reply,
+    sink: Arc<dyn CompletionSink>,
     input: Arc<Vec<f32>>,
+    /// Wall-clock admit time (for the e2e of a shutdown failure).
+    admitted_at: Micros,
     functions: Vec<FnCompletion>,
-    failed: bool,
+    /// First executor error observed for this request, if any.
+    error: Option<String>,
 }
 
 /// Work handed to a worker thread. `worker` is the pool-local id within
@@ -195,7 +300,8 @@ impl WorkerQueue {
 }
 
 /// Everything one shard's lock protects: the coordinator shard plus the
-/// driver-side job queues and reply table for requests homed there.
+/// driver-side job queues and pending-sink table for requests homed
+/// there.
 struct ShardRt {
     shard: Shard,
     /// Per worker-thread job queues (indexed by pool-local worker id).
@@ -250,9 +356,10 @@ fn fn_name(registry: &DagRegistry, f: FnId) -> String {
 /// shard*: `Enqueue`/`Advance` for this shard feed straight back into
 /// it (routing overhead is real lock time, not simulated),
 /// `Dispatched`/`SetupStarted` become worker jobs, and `RequestDone`
-/// resolves the caller's reply channel. Newly generated effects are
-/// processed until quiescent; effects that target another shard (or the
-/// front, for §6.1 re-routing) are returned for the caller to apply
+/// resolves the caller's completion sink (pushed to `done`; the caller
+/// delivers after releasing this shard's lock). Newly generated effects
+/// are processed until quiescent; effects that target another shard (or
+/// the front, for §6.1 re-routing) are returned for the caller to apply
 /// *after* releasing this shard's lock — no thread ever holds two shard
 /// locks.
 fn drain_local(
@@ -260,6 +367,7 @@ fn drain_local(
     now: Micros,
     fx: &mut Vec<Effect>,
     registry: &DagRegistry,
+    done: &mut Deliveries,
 ) -> Vec<Effect> {
     let my = sh.shard.id();
     let mut remote = Vec::new();
@@ -310,7 +418,7 @@ fn drain_local(
                             prewarm: false,
                         });
                 }
-                Effect::RequestDone { req, outcome } => finalize(sh, req, outcome),
+                Effect::RequestDone { req, outcome } => finalize(sh, req, outcome, done),
                 other => remote.push(other),
             }
         }
@@ -322,10 +430,12 @@ fn drain_local(
 /// whatever escaped to other shards.
 fn apply_on_shard(shared: &Shared, sgs: SgsId, now: Micros, mut fx: Vec<Effect>) -> Vec<Effect> {
     let cell = &shared.shards[sgs.0 as usize];
+    let mut done = Vec::new();
     let mut st = cell.state.lock().unwrap();
-    let remote = drain_local(&mut st, now, &mut fx, &shared.registry);
+    let remote = drain_local(&mut st, now, &mut fx, &shared.registry, &mut done);
     drop(st);
     cell.cv.notify_all();
+    deliver(done);
     remote
 }
 
@@ -355,13 +465,13 @@ fn apply_remote(shared: &Shared, now: Micros, fx: Vec<Effect>) {
             | Effect::Advance { sgs, .. } => apply_on_shard(shared, sgs, now, vec![e]),
             // A request's RequestDone is emitted under its home shard's
             // lock and resolved there by drain_local, because Pending
-            // (reply channel + input) lives on the home shard and does
+            // (completion sink + input) lives on the home shard and does
             // NOT migrate. That is sound today: the realtime server
             // exposes no SGS failure injection, so Reroute/Advance and a
             // deferred RequestDone are unreachable (handled defensively
             // above). If realtime shard failure is ever added, Pending
-            // must move together with Shard::install or replies leak —
-            // the assert below turns that silent hang into a loud one.
+            // must move together with Shard::install or sinks leak — the
+            // assert below turns that silent hang into a loud one.
             Effect::RequestDone { .. } => {
                 debug_assert!(
                     false,
@@ -378,41 +488,34 @@ fn apply_remote(shared: &Shared, now: Micros, fx: Vec<Effect>) {
     }
 }
 
-/// Resolve a finished request's reply channel.
-fn finalize(sh: &mut ShardRt, req: RequestId, outcome: RequestOutcome) {
+/// Resolve a finished request: build its terminal [`RequestResult`] and
+/// queue it for delivery once the shard lock is released. An executor
+/// error becomes an explicit [`RequestResult::Failed`] carrying the
+/// error — and is reclassified in the shard's [`Metrics`] so a failed
+/// request can never count as deadline-met.
+fn finalize(sh: &mut ShardRt, req: RequestId, outcome: RequestOutcome, done: &mut Deliveries) {
     let Some(p) = sh.pending.remove(&req.0) else {
         return;
     };
-    if p.failed {
-        // Executor error: drop the sender; the caller observes a closed
-        // channel (the pre-refactor contract for failed jobs).
-        return;
-    }
-    match p.reply {
-        Reply::Single(tx) => {
-            if let Some(f) = p.functions.into_iter().next() {
-                let _ = tx.send(Completion {
-                    artifact: f.artifact,
-                    worker: f.worker,
-                    cold: f.cold,
-                    queue_us: f.queue_us,
-                    setup_us: f.setup_us,
-                    exec_us: f.exec_us,
-                    e2e_us: outcome.e2e_latency(),
-                    outputs: f.outputs,
-                });
-            }
-        }
-        Reply::Dag(tx) => {
-            let _ = tx.send(DagCompletion {
+    let result = match p.error {
+        Some(error) => {
+            sh.shard.metrics.record_failure(&outcome);
+            RequestResult::Failed(FailedCompletion {
                 req,
                 e2e_us: outcome.e2e_latency(),
-                deadline_met: outcome.deadline_met(),
-                cold_starts: outcome.cold_starts,
+                error,
                 functions: p.functions,
-            });
+            })
         }
-    }
+        None => RequestResult::Done(DagCompletion {
+            req,
+            e2e_us: outcome.e2e_latency(),
+            deadline_met: outcome.deadline_met(),
+            cold_starts: outcome.cold_starts,
+            functions: p.functions,
+        }),
+    };
+    done.push((p.sink, result));
 }
 
 /// The real-time server: per-shard worker threads + optional
@@ -631,11 +734,11 @@ impl Server {
 
     /// Submit a single-artifact request; the completion arrives on the
     /// returned receiver (closed channel = unknown artifact or executor
-    /// failure).
+    /// failure). A thin blocking wrapper over [`Server::submit_dag_async`].
     pub fn submit(&self, artifact: &str, input: Vec<f32>, deadline_us: u64) -> Receiver<Completion> {
         let (tx, rx) = channel();
         if let Some(&dag) = self.shared.singles.get(artifact) {
-            self.admit(dag, input, deadline_us, Reply::Single(tx));
+            self.submit_dag_async(dag, input, deadline_us, Arc::new(SingleChannelSink(tx)));
         }
         rx
     }
@@ -643,8 +746,12 @@ impl Server {
     /// Submit a full DAG request with a per-request deadline: every
     /// function executes (dependency-ordered, warm-sandbox-aware) on the
     /// worker pool, and the aggregate completion arrives on the returned
-    /// receiver. An unregistered `dag` drops the channel (the caller
-    /// observes `recv() == Err`) instead of panicking the server.
+    /// receiver. An unregistered `dag` — or an executor failure — drops
+    /// the channel (the caller observes `recv() == Err`) instead of
+    /// panicking the server. A thin blocking wrapper over
+    /// [`Server::submit_dag_async`]; use that (and a shared sink) to
+    /// distinguish failures explicitly or to keep many requests in
+    /// flight from one thread.
     pub fn submit_dag(
         &self,
         dag: DagId,
@@ -652,7 +759,7 @@ impl Server {
         deadline_us: u64,
     ) -> Receiver<DagCompletion> {
         let (tx, rx) = channel();
-        self.admit(dag, input, deadline_us, Reply::Dag(tx));
+        self.submit_dag_async(dag, input, deadline_us, Arc::new(DagChannelSink(tx)));
         rx
     }
 
@@ -666,13 +773,35 @@ impl Server {
             .map(|d| d.id)
     }
 
-    fn admit(&self, dag: DagId, input: Vec<f32>, deadline_us: u64, reply: Reply) {
+    /// A registered DAG's default relative deadline (µs), if known —
+    /// what an open-loop driver submits with when it has no per-request
+    /// override.
+    pub fn dag_deadline(&self, dag: DagId) -> Option<Micros> {
+        self.shared.registry.try_get(dag).map(|d| d.deadline)
+    }
+
+    /// Non-blocking admission: route and enqueue the request, then
+    /// return immediately. The terminal result — done *or failed* — is
+    /// delivered to `sink` exactly once, from a worker thread, after the
+    /// request's last function settles (or at [`Server::shutdown`] if
+    /// the server stops first). Returns the request id, or `None` when
+    /// `dag` is not registered: nothing was admitted and the sink is
+    /// dropped without being called.
+    ///
+    /// One sink can be shared across any number of in-flight requests,
+    /// so a single generator thread can keep thousands of requests in
+    /// flight — the open-loop serving seam ([`crate::loadgen`]).
+    pub fn submit_dag_async(
+        &self,
+        dag: DagId,
+        input: Vec<f32>,
+        deadline_us: u64,
+        sink: Arc<dyn CompletionSink>,
+    ) -> Option<RequestId> {
         let now = self.shared.now();
         // Validate against the immutable registry before touching any
-        // lock; an unknown DAG just drops `reply` (closed channel).
-        let Some(spec) = self.shared.registry.try_get(dag) else {
-            return;
-        };
+        // lock; an unknown DAG admits nothing.
+        let spec = self.shared.registry.try_get(dag)?;
         let exec_times: Vec<Micros> = spec.functions.iter().map(|f| f.exec_time).collect();
         let mut fx = Vec::new();
         // Short front critical section: one LBS draw + root construction.
@@ -680,28 +809,30 @@ impl Server {
             let mut front = self.shared.front.lock().unwrap();
             front.admit(now, dag, exec_times, Some(deadline_us), &mut fx)
         };
-        let Some((req, sgs, state)) = admitted else {
-            return;
-        };
+        let (req, sgs, state) = admitted?;
         // Home-shard critical section: install state, enqueue roots,
         // drain the dispatch loop. Other shards stay untouched — admits
         // to different SGSs run fully in parallel.
         let cell = &self.shared.shards[sgs.0 as usize];
+        let mut done = Vec::new();
         let mut st = cell.state.lock().unwrap();
         st.shard.install(req, state);
         st.pending.insert(
             req.0,
             Pending {
-                reply,
+                sink,
                 input: Arc::new(input),
+                admitted_at: now,
                 functions: Vec::new(),
-                failed: false,
+                error: None,
             },
         );
-        let remote = drain_local(&mut st, now, &mut fx, &self.shared.registry);
+        let remote = drain_local(&mut st, now, &mut fx, &self.shared.registry, &mut done);
         drop(st);
         cell.cv.notify_all();
+        deliver(done);
         apply_remote(&self.shared, now, remote);
+        Some(req)
     }
 
     /// Warm sandbox kinds per worker thread (observability), indexed by
@@ -735,11 +866,38 @@ impl Server {
             .sum()
     }
 
-    /// Drain and stop all workers.
+    /// Stop all workers, then fail every request still in flight: the
+    /// sink contract — exactly one terminal result per admitted request
+    /// — holds even when the server stops with work queued, so an
+    /// open-loop driver can always reconcile submitted vs. completed.
+    /// (The blocking wrappers' channel sinks translate this failure into
+    /// their usual closed-channel signal.) Shutdown failures are not
+    /// recorded in [`Metrics`]: those requests never completed their
+    /// scheduling lifecycle.
     pub fn shutdown(mut self) {
         shutdown_workers(&self.shared, std::mem::take(&mut self.handles));
         if let Some(t) = self.ticker.take() {
             let _ = t.join();
+        }
+        let now = self.shared.now();
+        for cell in &self.shared.shards {
+            // Workers are joined: nobody else can touch `pending` now.
+            let done: Deliveries = {
+                let mut st = cell.state.lock().unwrap();
+                st.pending
+                    .drain()
+                    .map(|(id, p)| {
+                        let result = RequestResult::Failed(FailedCompletion {
+                            req: RequestId(id),
+                            e2e_us: now.saturating_sub(p.admitted_at),
+                            error: "server shut down with the request in flight".into(),
+                            functions: p.functions,
+                        });
+                        (p.sink, result)
+                    })
+                    .collect()
+            };
+            deliver(done);
         }
     }
 }
@@ -805,6 +963,7 @@ fn worker_main(
             } => {
                 let result = exec.warm_up(&artifact);
                 let now = shared.now();
+                let mut done = Vec::new();
                 let mut st = cell.state.lock().unwrap();
                 // Mark the sandbox warm even on a failed compile: the
                 // executor retries at execute time, and a second failure
@@ -812,9 +971,10 @@ fn worker_main(
                 // either way.
                 let mut fx = Vec::new();
                 st.shard.setup_done(now, worker, epoch, f, &mut fx);
-                let remote = drain_local(&mut st, now, &mut fx, &shared.registry);
+                let remote = drain_local(&mut st, now, &mut fx, &shared.registry, &mut done);
                 drop(st);
                 cell.cv.notify_all();
+                deliver(done);
                 apply_remote(&shared, now, remote);
                 if prewarm {
                     let mut pw = shared.prewarm.lock().unwrap();
@@ -851,6 +1011,7 @@ fn worker_main(
                 let exec_us = t0.elapsed().as_micros() as u64;
 
                 let now = shared.now();
+                let mut done = Vec::new();
                 let mut st = cell.state.lock().unwrap();
                 if let Some(p) = st.pending.get_mut(&req.0) {
                     match result {
@@ -864,14 +1025,21 @@ fn worker_main(
                             exec_us,
                             outputs,
                         }),
-                        Err(_) => p.failed = true,
+                        // First error wins; it reaches the caller in the
+                        // explicit FailedCompletion at finalize time.
+                        Err(e) => {
+                            if p.error.is_none() {
+                                p.error = Some(format!("{artifact}: {e}"));
+                            }
+                        }
                     }
                 }
                 let mut fx = Vec::new();
                 st.shard.fn_complete(now, worker, epoch, req, f, &mut fx);
-                let remote = drain_local(&mut st, now, &mut fx, &shared.registry);
+                let remote = drain_local(&mut st, now, &mut fx, &shared.registry, &mut done);
                 drop(st);
                 cell.cv.notify_all();
+                deliver(done);
                 apply_remote(&shared, now, remote);
             }
         }
@@ -898,14 +1066,16 @@ fn ticker_main(shared: Arc<Shared>) {
             last_est = now;
             for cell in &shared.shards {
                 let mut fx = Vec::new();
+                let mut done = Vec::new();
                 let mut st = cell.state.lock().unwrap();
                 if st.shutdown {
                     return;
                 }
                 let reports = st.shard.estimator_tick(now, &mut fx);
-                let remote = drain_local(&mut st, now, &mut fx, &shared.registry);
+                let remote = drain_local(&mut st, now, &mut fx, &shared.registry, &mut done);
                 drop(st);
                 cell.cv.notify_all();
+                deliver(done);
                 apply_remote(&shared, now, remote);
                 if !reports.is_empty() {
                     let mut front = shared.front.lock().unwrap();
@@ -942,11 +1112,14 @@ fn ticker_main(shared: Arc<Shared>) {
                     } => {
                         let cell = &shared.shards[sgs.0 as usize];
                         let mut fx = Vec::new();
+                        let mut done = Vec::new();
                         let mut st = cell.state.lock().unwrap();
                         st.shard.prime(now, dag, prime_target, expected_rate, &mut fx);
-                        let remote = drain_local(&mut st, now, &mut fx, &shared.registry);
+                        let remote =
+                            drain_local(&mut st, now, &mut fx, &shared.registry, &mut done);
                         drop(st);
                         cell.cv.notify_all();
+                        deliver(done);
                         apply_remote(&shared, now, remote);
                     }
                     crate::lbs::ScaleAction::In { .. } => {
@@ -1056,6 +1229,84 @@ mod tests {
         assert!(warm.iter().all(|&n| n >= 1), "warm on every shard: {warm:?}");
         let c = server.submit("score", vec![1.0, 1.0], 500_000).recv().unwrap();
         assert!(!c.cold, "prewarm covers whichever shard routing picked");
+        server.shutdown();
+    }
+
+    /// Forward every terminal result to an mpsc channel (test sink).
+    struct ResultSink(Sender<RequestResult>);
+
+    impl CompletionSink for ResultSink {
+        fn complete(&self, r: RequestResult) {
+            let _ = self.0.send(r);
+        }
+    }
+
+    #[test]
+    fn injected_executor_failure_delivers_explicit_failed_completion() {
+        // Regression (ISSUE 4 satellite): a failed executor job used to
+        // silently drop the reply channel, indistinguishable from a
+        // crash. The sink path must deliver an explicit failure with
+        // the error, and Metrics must count it.
+        let dags = vec![
+            DagSpec::single(DagId(0), "boom", 5 * MS, 20 * MS, 128, 500 * MS),
+            DagSpec::single(DagId(1), "fine", 5 * MS, 20 * MS, 128, 500 * MS),
+        ];
+        let factory = Arc::new(StubExecutorFactory {
+            fail_artifacts: ["boom".to_string()].into_iter().collect(),
+            ..Default::default()
+        });
+        let opts = RtOptions {
+            num_sgs: 1,
+            workers: 1,
+            policy: SchedPolicy::Srsf,
+            background_ticks: false,
+            pool_mb: 4 * 1024,
+        };
+        let server = Server::start_with(factory, dags, opts, &[], Manifest::empty()).unwrap();
+
+        // Async path: the failure is explicit and carries the cause.
+        let (tx, rx) = channel();
+        let req = server
+            .submit_dag_async(DagId(0), vec![1.0], 500_000, Arc::new(ResultSink(tx)))
+            .expect("known DAG admits");
+        match rx.recv().expect("exactly one terminal result") {
+            RequestResult::Failed(f) => {
+                assert_eq!(f.req, req);
+                assert!(f.error.contains("boom"), "error names the cause: {}", f.error);
+            }
+            RequestResult::Done(c) => panic!("failed execution reported as done: {c:?}"),
+        }
+
+        // Blocking wrapper keeps its pre-sink contract: closed channel.
+        assert!(server.submit_dag(DagId(0), vec![1.0], 500_000).recv().is_err());
+
+        // Healthy DAGs still serve, and the metrics ledger shows two
+        // failures whose timing-met credit was revoked.
+        let c = server
+            .submit_dag(DagId(1), vec![2.0, 2.0], 500_000)
+            .recv()
+            .expect("server survives failures");
+        assert!(c.deadline_met);
+        let row = server.summary();
+        assert_eq!(row.completed, 3);
+        assert_eq!(row.failed, 2);
+        assert!(
+            (row.deadline_met_rate - 1.0 / 3.0).abs() < 1e-9,
+            "failed requests cannot count as met: {}",
+            row.deadline_met_rate
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn unknown_dag_async_returns_none_without_touching_the_sink() {
+        let dag = DagSpec::single(DagId(0), "score", 5 * MS, 100 * MS, 128, 500 * MS);
+        let server = stub_server(1, vec![dag], &[]);
+        let (tx, rx) = channel();
+        assert!(server
+            .submit_dag_async(DagId(99), vec![1.0], 500_000, Arc::new(ResultSink(tx)))
+            .is_none());
+        assert!(rx.recv().is_err(), "sink dropped uncalled: channel closes");
         server.shutdown();
     }
 

@@ -471,19 +471,35 @@ impl ExecutorFactory for XlaExecutorFactory {
 }
 
 /// Deterministic stand-in executor: no artifacts, no PJRT. `warm_up`
-/// sleeps `setup_cost` (the real compile's stand-in), `execute` sleeps
-/// `exec_cost` and returns `[sum(input)]` so callers can verify data
-/// flow. Drives the real-time platform in tests and demos.
+/// sleeps the artifact's setup cost (the real compile's stand-in),
+/// `execute` sleeps its exec cost and returns `[sum(input)]` so callers
+/// can verify data flow. Costs come from the factory's per-artifact
+/// table when present, the flat defaults otherwise — the table is what
+/// lets an open-loop replay reproduce a workload's real service-time
+/// distribution on the stub. Drives the real-time platform in tests and
+/// demos.
 pub struct StubExecutor {
     warm: std::collections::HashSet<String>,
     setup_cost: std::time::Duration,
     exec_cost: std::time::Duration,
+    costs: HashMap<String, (std::time::Duration, std::time::Duration)>,
+    fail_artifacts: std::collections::HashSet<String>,
+}
+
+impl StubExecutor {
+    fn cost_of(&self, artifact: &str) -> (std::time::Duration, std::time::Duration) {
+        self.costs
+            .get(artifact)
+            .copied()
+            .unwrap_or((self.setup_cost, self.exec_cost))
+    }
 }
 
 impl WorkerExecutor for StubExecutor {
     fn warm_up(&mut self, artifact: &str) -> Result<(), RuntimeError> {
-        if self.warm.insert(artifact.to_string()) && !self.setup_cost.is_zero() {
-            std::thread::sleep(self.setup_cost);
+        let (setup, _) = self.cost_of(artifact);
+        if self.warm.insert(artifact.to_string()) && !setup.is_zero() {
+            std::thread::sleep(setup);
         }
         Ok(())
     }
@@ -494,18 +510,33 @@ impl WorkerExecutor for StubExecutor {
 
     fn execute(&mut self, artifact: &str, input: &[f32]) -> Result<Vec<Tensor>, RuntimeError> {
         self.warm_up(artifact)?;
-        if !self.exec_cost.is_zero() {
-            std::thread::sleep(self.exec_cost);
+        let (_, exec) = self.cost_of(artifact);
+        if !exec.is_zero() {
+            std::thread::sleep(exec);
+        }
+        if self.fail_artifacts.contains(artifact) {
+            return Err(RuntimeError::Xla(format!(
+                "injected failure for '{artifact}'"
+            )));
         }
         Ok(vec![Tensor::F32(vec![input.iter().sum()])])
     }
 }
 
-/// Factory for [`StubExecutor`]s with fixed per-operation costs.
+/// Factory for [`StubExecutor`]s.
+///
+/// `setup_cost`/`exec_cost` are the flat per-operation defaults;
+/// `costs` overrides them per artifact name (setup, exec) so workload
+/// replays can give every function its sampled service time;
+/// `fail_artifacts` makes the named artifacts' executions return an
+/// error — the failure-injection hook for testing the explicit
+/// failed-completion path.
 #[derive(Debug, Clone, Default)]
 pub struct StubExecutorFactory {
     pub setup_cost: std::time::Duration,
     pub exec_cost: std::time::Duration,
+    pub costs: HashMap<String, (std::time::Duration, std::time::Duration)>,
+    pub fail_artifacts: std::collections::HashSet<String>,
 }
 
 impl ExecutorFactory for StubExecutorFactory {
@@ -514,6 +545,8 @@ impl ExecutorFactory for StubExecutorFactory {
             warm: Default::default(),
             setup_cost: self.setup_cost,
             exec_cost: self.exec_cost,
+            costs: self.costs.clone(),
+            fail_artifacts: self.fail_artifacts.clone(),
         }))
     }
 }
@@ -538,6 +571,28 @@ mod tests {
         assert_eq!(out[0].as_f32().unwrap(), &[6.5]);
         assert!(exec.is_warm("f"));
         assert!(!exec.is_warm("g"));
+    }
+
+    #[test]
+    fn stub_executor_per_artifact_costs_and_injected_failure() {
+        let mut factory = StubExecutorFactory::default();
+        factory.costs.insert(
+            "slow".into(),
+            (
+                std::time::Duration::ZERO,
+                std::time::Duration::from_millis(1),
+            ),
+        );
+        factory.fail_artifacts.insert("boom".into());
+        let mut exec = factory.make(0).unwrap();
+        assert!(exec.execute("ok", &[1.0]).is_ok());
+        let err = exec.execute("boom", &[1.0]).unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+        assert!(exec.is_warm("boom"), "failure lands after warm-up");
+        // injected failures are persistent, not one-shot
+        assert!(exec.execute("boom", &[1.0]).is_err());
+        let out = exec.execute("slow", &[2.0, 3.0]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[5.0]);
     }
 
     #[test]

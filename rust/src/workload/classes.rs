@@ -119,13 +119,22 @@ pub fn make_app(
             let exec_total = sample_range_us(rng, 300, 600);
             let slack = sample_range_us(rng, 500, 1000);
             let branches = rng.range_usize(2, 4);
-            // root third, branches third (parallel), join third
+            // root third, branches third (parallel), join third.
+            // Function names carry the DAG prefix: the real-time
+            // executors key warm state by *name*, so two C4 apps must
+            // not alias each other's sandboxes.
             let part = exec_total / 3;
-            let mut functions = vec![FunctionSpec::new("root", part, setup, FN_MEM_MB)];
+            let prefix = format!("c4-{}", id.0);
+            let mut functions = vec![FunctionSpec::new(
+                &format!("{prefix}-root"),
+                part,
+                setup,
+                FN_MEM_MB,
+            )];
             let mut edges = Vec::new();
             for b in 0..branches {
                 functions.push(FunctionSpec::new(
-                    &format!("branch{b}"),
+                    &format!("{prefix}-branch{b}"),
                     part,
                     setup,
                     FN_MEM_MB,
@@ -133,7 +142,12 @@ pub fn make_app(
                 edges.push((0u16, (b + 1) as u16));
             }
             let join_idx = (branches + 1) as u16;
-            functions.push(FunctionSpec::new("join", part, setup, FN_MEM_MB));
+            functions.push(FunctionSpec::new(
+                &format!("{prefix}-join"),
+                part,
+                setup,
+                FN_MEM_MB,
+            ));
             for b in 0..branches {
                 edges.push(((b + 1) as u16, join_idx));
             }

@@ -1,9 +1,12 @@
-//! Workload generation: arrival processes, the §7.1 DAG classes, and the
-//! synthetic SAR app population for the §2.2 characterization figures.
+//! Workload generation: arrival processes, the §7.1 DAG classes, the
+//! synthetic SAR app population for the §2.2 characterization figures,
+//! and pre-materialized schedules for open-loop wall-clock replay.
 
 pub mod arrival;
 pub mod classes;
 pub mod sar;
+pub mod schedule;
 
 pub use arrival::ArrivalProcess;
 pub use classes::{macro_mix, make_app, offered_cores, peak_offered_cores, App, DagClass, WorkloadKind};
+pub use schedule::materialize_schedule;

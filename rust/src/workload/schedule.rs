@@ -1,0 +1,129 @@
+//! Pre-materialized request schedules: a workload reduced to the
+//! driver-agnostic form `Vec<(Micros, DagId)>` — every arrival as a
+//! concrete (time, dag) pair.
+//!
+//! The same W1 resampled-Poisson and W2 sinusoid processes that feed
+//! the discrete-event simulator ([`crate::platform::SimPlatform`]) can
+//! be replayed against the wall-clock server by walking this vector
+//! ([`crate::loadgen`]): the schedule is computed up front, so the
+//! replayer spends its time dispatching, not sampling, and two drivers
+//! given the same seed see the *same* arrival sequence.
+//!
+//! The `time_scale` knob stretches the schedule uniformly (2.0 = half
+//! the arrival rate, same shape): a laptop-sized stub cluster can
+//! replay the paper's traffic shape in slow motion without changing the
+//! process statistics. Scale service times and deadlines by the same
+//! factor to keep the run self-similar (the loadgen does).
+
+use crate::config::Micros;
+use crate::dag::DagId;
+use crate::util::rng::Rng;
+
+use super::classes::App;
+
+/// Stretch a virtual time by the schedule's time scale.
+pub fn scale_us(t: Micros, time_scale: f64) -> Micros {
+    (t as f64 * time_scale).round() as Micros
+}
+
+/// Materialize every app's arrival process over `[0, horizon)` (virtual
+/// time, *before* scaling), merge, and time-sort. Deterministic per
+/// `seed`: each app draws from its own forked stream keyed by its DAG
+/// id, so adding an app never perturbs the others' arrivals. Ties are
+/// broken by DAG id for a fully deterministic replay order.
+pub fn materialize_schedule(
+    apps: &[App],
+    horizon: Micros,
+    time_scale: f64,
+    seed: u64,
+) -> Vec<(Micros, DagId)> {
+    assert!(
+        time_scale > 0.0 && time_scale.is_finite(),
+        "time_scale must be positive, got {time_scale}"
+    );
+    let mut entries: Vec<(Micros, DagId)> = Vec::new();
+    for app in apps {
+        let mut arrivals = app.arrivals.clone();
+        // Fresh base per app: the fork depends only on (seed, dag id),
+        // never on the app's position in the slice.
+        let mut rng = Rng::new(seed).fork(u64::from(app.dag.id.0));
+        for t in arrivals.materialize(horizon, &mut rng) {
+            entries.push((scale_us(t, time_scale), app.dag.id));
+        }
+    }
+    entries.sort_unstable_by_key(|&(t, dag)| (t, dag.0));
+    entries
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SEC;
+    use crate::workload::{macro_mix, offered_cores, WorkloadKind};
+
+    fn mix() -> Vec<App> {
+        macro_mix(WorkloadKind::W2, 1, 0.01, 42)
+    }
+
+    #[test]
+    fn schedule_is_sorted_and_deterministic() {
+        let a = materialize_schedule(&mix(), 30 * SEC, 1.0, 7);
+        let b = materialize_schedule(&mix(), 30 * SEC, 1.0, 7);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert!(!a.is_empty());
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0), "time-sorted");
+        assert!(a.iter().all(|&(t, _)| t < 30 * SEC));
+        let c = materialize_schedule(&mix(), 30 * SEC, 1.0, 8);
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn time_scale_stretches_without_resampling() {
+        let one = materialize_schedule(&mix(), 20 * SEC, 1.0, 9);
+        let two = materialize_schedule(&mix(), 20 * SEC, 2.0, 9);
+        assert_eq!(one.len(), two.len(), "same arrivals, different clock");
+        // Entry-by-entry the same (dag, 2×time) — sorting is scale-
+        // invariant because scaling is monotone and ties keep dag order.
+        for (&(t1, d1), &(t2, d2)) in one.iter().zip(&two) {
+            assert_eq!(d1, d2);
+            assert_eq!(t2, t1 * 2);
+        }
+    }
+
+    #[test]
+    fn per_dag_rates_track_offered_load() {
+        let apps = mix();
+        let horizon = 100 * SEC;
+        let sched = materialize_schedule(&apps, horizon, 1.0, 5);
+        for app in &apps {
+            let n = sched.iter().filter(|&&(_, d)| d == app.dag.id).count() as f64;
+            let measured_rps = n / 100.0;
+            let total_exec: f64 = app
+                .dag
+                .functions
+                .iter()
+                .map(|f| f.exec_time as f64 / SEC as f64)
+                .sum();
+            let expected_rps = offered_cores(app) / total_exec;
+            let rel = (measured_rps - expected_rps).abs() / expected_rps.max(1e-9);
+            assert!(
+                rel < 0.25,
+                "dag {} measured {measured_rps:.2} rps vs expected {expected_rps:.2}",
+                app.dag.id.0
+            );
+        }
+    }
+
+    #[test]
+    fn adding_an_app_does_not_perturb_existing_streams() {
+        let apps = mix();
+        let full = materialize_schedule(&apps, 20 * SEC, 1.0, 3);
+        let first_only = materialize_schedule(&apps[..1], 20 * SEC, 1.0, 3);
+        let filtered: Vec<_> = full
+            .iter()
+            .copied()
+            .filter(|&(_, d)| d == apps[0].dag.id)
+            .collect();
+        assert_eq!(filtered, first_only, "per-app streams are independent");
+    }
+}

@@ -1,0 +1,172 @@
+//! Open-loop overload tests (ISSUE 4 satellite): burst far above
+//! cluster capacity through the non-blocking `submit_dag_async` path
+//! and check the sink contract end-to-end — every submitted request
+//! yields *exactly one* terminal result (met, missed, or failed), the
+//! sink tallies reconcile with the shared `Metrics`, and the server
+//! shuts down cleanly with requests still queued.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use archipelago::config::{SchedPolicy, MS};
+use archipelago::dag::{DagId, DagSpec};
+use archipelago::platform::realtime::{CompletionSink, RequestResult, RtOptions, Server};
+use archipelago::runtime::{Manifest, StubExecutorFactory};
+
+/// Counts every terminal result by kind and flags duplicate deliveries.
+#[derive(Default)]
+struct TallySink {
+    met: AtomicU64,
+    missed: AtomicU64,
+    exec_failed: AtomicU64,
+    shutdown_failed: AtomicU64,
+    duplicates: AtomicU64,
+    seen: Mutex<HashSet<u64>>,
+}
+
+impl TallySink {
+    fn total(&self) -> u64 {
+        self.met.load(Ordering::Relaxed)
+            + self.missed.load(Ordering::Relaxed)
+            + self.exec_failed.load(Ordering::Relaxed)
+            + self.shutdown_failed.load(Ordering::Relaxed)
+    }
+}
+
+impl CompletionSink for TallySink {
+    fn complete(&self, r: RequestResult) {
+        if !self.seen.lock().unwrap().insert(r.req().0) {
+            self.duplicates.fetch_add(1, Ordering::Relaxed);
+        }
+        match r {
+            RequestResult::Done(c) => {
+                if c.deadline_met {
+                    self.met.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.missed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            RequestResult::Failed(f) => {
+                if f.error.contains("shut down") {
+                    self.shutdown_failed.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.exec_failed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+fn overload_server(exec_ms: u64) -> Server {
+    // One shard, ONE worker core: any burst is instantly over capacity.
+    let dags = vec![
+        DagSpec::single(DagId(0), "work", 2 * MS, 10 * MS, 128, 10_000 * MS),
+        DagSpec::single(DagId(1), "boom", 2 * MS, 10 * MS, 128, 10_000 * MS),
+    ];
+    let factory = Arc::new(StubExecutorFactory {
+        exec_cost: Duration::from_millis(exec_ms),
+        fail_artifacts: ["boom".to_string()].into_iter().collect(),
+        ..Default::default()
+    });
+    let opts = RtOptions {
+        num_sgs: 1,
+        workers: 1,
+        policy: SchedPolicy::Srsf,
+        background_ticks: false,
+        pool_mb: 4 * 1024,
+    };
+    Server::start_with(factory, dags, opts, &[], Manifest::empty()).unwrap()
+}
+
+fn wait_settled(sink: &TallySink, expected: u64) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while sink.total() < expected && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn overload_burst_every_request_settles_and_reconciles_with_metrics() {
+    let server = overload_server(2);
+    let sink = Arc::new(TallySink::default());
+
+    // 110 requests burst-submitted at a 1-core cluster (~220 ms of
+    // work): 50 with a generous 10 s deadline (will be met), 50 with a
+    // 1 ms deadline (cannot be met — execution alone takes 2 ms), and
+    // 10 executor failures. Nothing blocks: the generator thread is
+    // done submitting in microseconds per request.
+    let mut submitted = 0u64;
+    for i in 0..110u64 {
+        let (dag, deadline) = match i % 11 {
+            10 => (DagId(1), 10_000_000),      // boom
+            x if x % 2 == 0 => (DagId(0), 10_000_000), // loose → met
+            _ => (DagId(0), 1_000),            // tight → missed
+        };
+        let s: Arc<dyn CompletionSink> = sink.clone();
+        assert!(
+            server.submit_dag_async(dag, vec![1.0], deadline, s).is_some(),
+            "known DAG must admit"
+        );
+        submitted += 1;
+    }
+    wait_settled(&sink, submitted);
+    assert_eq!(sink.total(), submitted, "exactly one result per request");
+    assert_eq!(sink.duplicates.load(Ordering::Relaxed), 0);
+    assert_eq!(sink.exec_failed.load(Ordering::Relaxed), 10);
+    assert_eq!(sink.shutdown_failed.load(Ordering::Relaxed), 0);
+    assert_eq!(sink.met.load(Ordering::Relaxed), 50);
+    assert_eq!(sink.missed.load(Ordering::Relaxed), 50);
+
+    // Totals reconcile with the shared Metrics exactly: every request
+    // completed its lifecycle; failures are counted and their timing
+    // credit revoked.
+    let row = server.summary();
+    assert_eq!(row.completed, submitted);
+    assert_eq!(row.failed, 10);
+    assert!(
+        (row.deadline_met_rate - 50.0 / 110.0).abs() < 1e-9,
+        "metrics met-rate {} vs sink 50/110",
+        row.deadline_met_rate
+    );
+    server.shutdown();
+    assert_eq!(sink.total(), submitted, "shutdown adds nothing after settle");
+}
+
+#[test]
+fn shutdown_with_queued_requests_fails_them_explicitly() {
+    let server = overload_server(2);
+    let sink = Arc::new(TallySink::default());
+
+    // ~800 ms of queued work on one core; stop the server after ~100 ms.
+    const BURST: u64 = 400;
+    for _ in 0..BURST {
+        let s: Arc<dyn CompletionSink> = sink.clone();
+        assert!(server
+            .submit_dag_async(DagId(0), vec![1.0], 60_000_000, s)
+            .is_some());
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    let row = server.summary();
+    server.shutdown(); // consumes the server; workers joined, pending drained
+
+    assert_eq!(
+        sink.total(),
+        BURST,
+        "every queued request must get a terminal result at shutdown"
+    );
+    assert_eq!(sink.duplicates.load(Ordering::Relaxed), 0);
+    let done = sink.met.load(Ordering::Relaxed) + sink.missed.load(Ordering::Relaxed);
+    let killed = sink.shutdown_failed.load(Ordering::Relaxed);
+    assert!(done >= 1, "~100 ms of 2 ms jobs: some must have finished");
+    assert!(
+        killed > 0,
+        "the burst cannot drain in 100 ms: requests must still be queued"
+    );
+    assert_eq!(done + killed, BURST);
+    // The pre-shutdown metrics snapshot can only have counted requests
+    // that completed their lifecycle — never the ones later killed.
+    assert!(row.completed <= done, "snapshot {} vs done {done}", row.completed);
+    assert_eq!(sink.exec_failed.load(Ordering::Relaxed), 0);
+}

@@ -44,6 +44,7 @@ fn start_stub(
     let factory = Arc::new(StubExecutorFactory {
         setup_cost: Duration::from_millis(setup_ms),
         exec_cost: Duration::from_millis(exec_ms),
+        ..Default::default()
     });
     let opts = RtOptions {
         num_sgs: 1,
@@ -215,6 +216,7 @@ fn concurrent_submitters_across_shards() {
     let factory = Arc::new(StubExecutorFactory {
         setup_cost: Duration::from_millis(2),
         exec_cost: Duration::from_millis(2),
+        ..Default::default()
     });
     let opts = RtOptions {
         num_sgs: NUM_SGS,
